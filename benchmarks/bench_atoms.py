@@ -1,0 +1,47 @@
+"""Atom fidelity microbench: a planned resource amount is consumed at the
+calibrated rate (the paper's premise that atoms emulate at known efficiency).
+Also sweeps the memory atom's block size (paper §IV-E.3 block-size knob)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.core import ComputeAtom, MemoryAtom, StorageAtom, calibrate
+
+
+def main(fast: bool = False):
+    calib = calibrate()
+    rows = []
+    # compute atom: planned flops vs wall time * calibrated rate
+    atom = ComputeAtom(calib, tile=256)
+    for gflops in ([2.0] if fast else [1.0, 4.0, 16.0]):
+        thunk = atom.plan(gflops * 1e9)
+        thunk()                                      # warm
+        t0 = time.perf_counter(); done = thunk(); dt = time.perf_counter() - t0
+        rows.append({"atom": "compute", "planned_gflops": gflops,
+                     "consumed_gflops": done / 1e9, "wall_s": dt,
+                     "rate_gflops": done / dt / 1e9,
+                     "calib_gflops": calib.flops_per_s / 1e9})
+    # memory atom block-size sweep
+    for block in ([1 << 22] if fast else [1 << 18, 1 << 22, 1 << 25]):
+        matom = MemoryAtom(calib, block_bytes=block)
+        thunk = matom.plan(512e6)
+        thunk()
+        t0 = time.perf_counter(); done = thunk(); dt = time.perf_counter() - t0
+        rows.append({"atom": "memory", "block_bytes": block,
+                     "consumed_mb": done / 1e6, "wall_s": dt,
+                     "rate_gbps": done / dt / 1e9,
+                     "calib_gbps": calib.stream_bytes_per_s / 1e9})
+    # storage atom
+    satom = StorageAtom(calib, block_bytes=1 << 20)
+    thunk = satom.plan_write(32e6)
+    t0 = time.perf_counter(); done = thunk(); dt = time.perf_counter() - t0
+    rows.append({"atom": "storage_write", "consumed_mb": done / 1e6,
+                 "wall_s": dt, "rate_mbps": done / dt / 1e6,
+                 "calib_mbps": calib.storage_write_bps / 1e6})
+    emit("atoms", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Paper Experiment 4 (Figs. 8, 9) + Fig. 3 — profile once, emulate anywhere.
+
+The profile taken on this host is replayed under emulated "other machines"
+(CPU 25% faster / disk 50% slower — the exact Fig. 3 scenario — plus
+Stampede/Archer-like scalings), and TTC is *predicted* for hardware we
+cannot run (TPU v5e chip).  Checks: consumption totals are invariant, TTC
+scales with the hardware, and the dominant resource flips.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, tiny_train_workload
+from repro.core import (Emulator, HOST_ARCHER_NODE, HOST_I7_M620,
+                        HOST_STAMPEDE_NODE, TPU_V5E, calibrate, compare,
+                        predict, profile_compiled)
+from repro.core.metrics import ResourceVector, Sample, SynapseProfile
+
+
+def _mixed_profile(calib, io_mb: float = 16.0, steps: int = 4):
+    """A profile with both compute and storage so dominance can flip."""
+    run_fn, meta = tiny_train_workload(steps=steps)
+    from benchmarks.bench_profiling_consistency import (_abstract_batch,
+                                                        _abstract_state)
+    compiled = meta["step"].lower(_abstract_state(meta["model"]),
+                                  _abstract_batch(meta)).compile()
+    prof = profile_compiled(compiled, command="bench-lm", granularity="scan")
+    samples = []
+    for i in range(steps):
+        for s in prof.samples:
+            samples.append(Sample(index=len(samples), resources=s.resources,
+                                  label=s.label))
+        # checkpoint-like write after each step
+        samples.append(Sample(
+            index=len(samples),
+            resources=ResourceVector(
+                storage_write_bytes=io_mb * 1e6 / steps),
+            label="ckpt"))
+    return SynapseProfile(command="bench-lm+io", samples=samples)
+
+
+def main(fast: bool = False):
+    calib = calibrate()
+    prof = _mixed_profile(calib, steps=2 if fast else 4)
+    rows = []
+
+    # --- emulate under scaled hosts (Fig. 3 scenario) -----------------------
+    scenarios = [
+        ("this_host", 1.0, 1.0),
+        ("cpu_25pct_faster", 1 / 1.25, 1.0),
+        ("disk_50pct_slower", 1.0, 2.0),
+        ("fig3_both", 1 / 1.25, 2.0),
+    ]
+    emulator = Emulator(calib)
+    base_ttc = None
+    for name, fscale, sscale in (scenarios[:2] if fast else scenarios):
+        rep = emulator.emulate(prof, flops_scale=fscale,
+                               storage_scale=sscale)
+        if base_ttc is None:
+            base_ttc = rep.ttc_s
+        rows.append({"kind": "emulated", "target": name,
+                     "ttc_s": rep.ttc_s,
+                     "vs_host_pct": 100 * (rep.ttc_s - base_ttc) / base_ttc,
+                     "flops": rep.consumed.flops,
+                     "write_bytes": rep.consumed.storage_write_bytes})
+
+    # --- predict on machines we cannot run (incl. TPU) ----------------------
+    comparison = compare(prof, [HOST_I7_M620, HOST_STAMPEDE_NODE,
+                                HOST_ARCHER_NODE, TPU_V5E])
+    for hw, v in comparison.items():
+        rows.append({"kind": "predicted", "target": hw,
+                     "ttc_s": v["ttc_max"], "ttc_serial_s": v["ttc_sum"],
+                     "dominant": v["dominant_total"],
+                     "dominant_histogram": str(v["dominant_histogram"])})
+    emit("emulation_portability", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Paper Experiment 3 (Fig. 7) — emulation fidelity on the profiling host.
+
+Profile the application (runtime watchers for TTC truth + static watcher for
+resource amounts), emulate it with the atoms on the same host, compare TTC.
+Also sweeps emulation granularity (paper Fig. 2 discussion): 1 sample vs
+per-scan samples — finer sampling re-serializes concurrent consumption.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, tiny_train_workload
+from repro.core import (Emulator, RuntimeProfiler, calibrate,
+                        profile_compiled)
+from repro.core.metrics import ResourceVector, Sample, SynapseProfile
+
+
+def main(fast: bool = False):
+    calib = calibrate()
+    rows = []
+    sizes = [4] if fast else [2, 4, 8, 16]
+    for steps in sizes:
+        run_fn, meta = tiny_train_workload(steps=steps)
+        # --- application truth (median of 3)
+        walls = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            run_fn()
+            walls.append(time.perf_counter() - t0)
+        app_s = sorted(walls)[1]
+
+        # --- static profile of one step, scaled by step count
+        from benchmarks.bench_profiling_consistency import (_abstract_batch,
+                                                            _abstract_state)
+        compiled = meta["step"].lower(_abstract_state(meta["model"]),
+                                      _abstract_batch(meta)).compile()
+        for granularity in (["scan"] if fast else ["step", "scan"]):
+            prof = profile_compiled(compiled, command="bench-lm",
+                                    tags={"steps": str(steps)},
+                                    granularity=granularity)
+            samples = []
+            for i in range(steps):
+                for s in prof.samples:
+                    samples.append(Sample(index=len(samples),
+                                          resources=s.resources,
+                                          label=s.label))
+            full = SynapseProfile(command=prof.command, tags=prof.tags,
+                                  samples=samples)
+            total_flops = full.totals.flops
+            # the paper's CPU-efficiency metric: achieved / atom peak
+            eff = (total_flops / app_s) / calib.flops_per_s
+            for mode, emu in (
+                    ("default", Emulator(calib)),
+                    ("eff_matched", Emulator(calib, efficiency=eff))):
+                rep = emu.emulate(full)
+                rows.append({
+                    "app_steps": steps,
+                    "granularity": granularity,
+                    "mode": mode,
+                    "n_samples": len(samples),
+                    "app_s": app_s,
+                    "emulated_s": rep.ttc_s,
+                    "diff_pct": 100.0 * (rep.ttc_s - app_s) / app_s,
+                    "app_efficiency": eff,
+                })
+    emit("emulation_same_host", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Paper Experiment 1 (Fig. 4) — profiling self-interference & overhead.
+
+TTC of the application (a real LM train loop) alone vs under the Synapse
+runtime watchers, across application sizes and sampling rates.  Requirement
+P.1/P.2: overhead ~ 0 independent of size and rate.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, tiny_train_workload
+from repro.core import RuntimeProfiler
+
+
+def main(fast: bool = False):
+    rows = []
+    sizes = [1, 4] if fast else [1, 2, 4, 8]
+    rates = [10] if fast else [2, 10, 50]
+    for steps in sizes:
+        run_fn, meta = tiny_train_workload(steps=steps)
+        # plain run (median of 3)
+        plain = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            run_fn()
+            plain.append(time.perf_counter() - t0)
+        plain_s = sorted(plain)[1]
+        for rate in rates:
+            prof = RuntimeProfiler(sample_rate=rate).profile_callable(
+                run_fn, command="bench-lm", tags={"steps": str(steps)})
+            rows.append({
+                "app_steps": steps,
+                "sample_rate": rate,
+                "plain_s": plain_s,
+                "profiled_s": prof.meta["wall_s"],
+                "overhead_pct": 100.0 * (prof.meta["wall_s"] - plain_s)
+                / max(plain_s, 1e-9),
+                "n_samples": len(prof.samples),
+            })
+    emit("profiling_overhead", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Shared benchmark plumbing: tiny-workload builders + CSV emit helpers."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+RESULT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "results")
+
+
+def emit(name: str, rows: List[Dict], keys=None):
+    """Print ``name,us_per_call,derived`` style CSV + persist JSON."""
+    os.makedirs(RESULT_DIR, exist_ok=True)
+    with open(os.path.join(RESULT_DIR, name + ".json"), "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    if rows:
+        if keys is None:
+            keys = []
+            for r in rows:
+                for k in r:
+                    if k not in keys:
+                        keys.append(k)
+        print(f"# {name}")
+        print(",".join(keys))
+        for r in rows:
+            print(",".join(_fmt(r.get(k)) for k in keys))
+    sys.stdout.flush()
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def tiny_train_workload(num_layers=3, d_model=128, vocab=256, seq=128,
+                        batch=8, steps=1):
+    """A small real LM train function: the 'application' Synapse profiles."""
+    from repro.configs.base import ModelConfig
+    from repro.configs.run import RunConfig
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.models.model_zoo import build_model
+    from repro.optim.adamw import OptConfig
+    from repro.train.step import init_train_state, make_train_step
+
+    cfg = ModelConfig(name=f"bench-lm-{num_layers}x{d_model}", family="dense",
+                      num_layers=num_layers, d_model=d_model, num_heads=4,
+                      num_kv_heads=2, head_dim=max(d_model // 4, 8),
+                      d_ff=d_model * 2, vocab_size=vocab, tie_embeddings=True)
+    run = RunConfig(param_dtype="float32", compute_dtype="float32",
+                    remat="none", loss_chunk=0)
+    model = build_model(cfg, run)
+    data = SyntheticLM(DataConfig(vocab_size=vocab, seq_len=seq,
+                                  global_batch=batch))
+    step = jax.jit(make_train_step(model, OptConfig()), donate_argnums=0)
+    state = init_train_state(model, jax.random.key(0))
+    batches = [data.batch_at(i) for i in range(steps)]
+
+    # warm up compile outside the profiled region (we profile steady state)
+    state, _ = step(state, batches[0])
+    jax.block_until_ready(state["params"])
+    holder = {"state": state}
+
+    def run_fn():
+        s = holder["state"]
+        for b in batches:
+            s, _ = step(s, b)
+        jax.block_until_ready(s["params"])
+        holder["state"] = s
+
+    meta = {"cfg": cfg, "model": model, "step": step, "steps": steps,
+            "tokens_per_step": seq * batch}
+    return run_fn, meta

@@ -1,0 +1,55 @@
+"""Quickstart: profile once, emulate anywhere — in 40 lines.
+
+Profiles a real (tiny) LM training step on this host, stores the profile,
+replays it through the emulation atoms, and predicts its TTC on a TPU v5e
+chip we don't have.  PYTHONPATH=src python examples/quickstart.py
+"""
+import os, sys
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path[:0] = [os.path.join(_ROOT, 'src'), _ROOT]
+
+import tempfile
+import time
+
+from benchmarks.common import tiny_train_workload
+from benchmarks.bench_profiling_consistency import (_abstract_batch,
+                                                    _abstract_state)
+from repro.core import (Emulator, ProfileStore, RuntimeProfiler, TPU_V5E,
+                        calibrate, predict, profile_compiled)
+
+
+def main():
+    run_fn, meta = tiny_train_workload(steps=4)
+
+    # 1. profile (runtime watchers observe the black-box run)
+    prof = RuntimeProfiler(sample_rate=20).profile_callable(
+        run_fn, command="quickstart-lm", tags={"steps": "4"},
+        flops_per_cpu_s=calibrate().flops_per_s)
+    print(f"profiled: wall={prof.meta['wall_s']:.3f}s "
+          f"samples={len(prof.samples)} peak_mem="
+          f"{prof.totals.peak_mem_bytes/1e6:.0f}MB")
+
+    # ... and statically from the compiled step (exact resource counts)
+    compiled = meta["step"].lower(_abstract_state(meta["model"]),
+                                  _abstract_batch(meta)).compile()
+    sprof = profile_compiled(compiled, command="quickstart-lm-static")
+    print(f"static:   flops/step={sprof.totals.flops:.3e} "
+          f"ici={sprof.totals.ici_total:.3e}B samples={len(sprof.samples)}")
+
+    # 2. store (tagged, statistical over repeats)
+    store = ProfileStore(tempfile.mkdtemp())
+    store.add(prof)
+    print(f"stored:   {store.keys()}")
+
+    # 3. emulate anywhere (same host here)
+    rep = Emulator().emulate(sprof)
+    print(f"emulated: ttc={rep.ttc_s:.3f}s flops={rep.consumed.flops:.3e}")
+
+    # 4. predict TTC on hardware we don't have
+    pred = predict(sprof, TPU_V5E)
+    print(f"tpu v5e:  step={pred.ttc_max*1e6:.1f}us "
+          f"dominant={pred.terms.dominant}")
+
+
+if __name__ == "__main__":
+    main()

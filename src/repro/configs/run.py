@@ -1,0 +1,59 @@
+"""Run settings orthogonal to the architecture: dtypes, remat, attention impl,
+loss chunking, parallelism toggles.  These are the hillclimb knobs — §Perf in
+EXPERIMENTS.md iterates on them per cell.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional
+
+import jax.numpy as jnp
+
+_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+           "float16": jnp.float16}
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    cache_dtype: str = "bfloat16"
+    # attention
+    attn_impl: str = "auto"              # auto | full | blocked | pallas
+    block_q: int = 512
+    block_kv: int = 1024
+    blocked_threshold: int = 2048
+    skip_attn_blocks: bool = False       # static causal block skipping
+    # memory / remat
+    remat: str = "full"                  # none | dots | full
+    loss_chunk: int = 512                # 0 = unchunked [B,S,V] logits
+    # optimizer / distribution
+    zero1: bool = True                   # shard optimizer state over 'data'
+    sharding_mode: str = "megatron"      # megatron (TP+SP+FSDP) | fsdp (ZeRO-3 only)
+    grad_compression: str = "none"       # none | int8_ef
+    microbatches: int = 1
+    pipeline_stages: int = 1             # >1 routes pod axis to pipeline
+    # moe
+    moe_dense_smoke: bool = False        # tiny-model testing aid
+    # serving
+    max_cache_len: int = 0               # 0 = derived from shape
+
+    @property
+    def pdtype(self):
+        return _DTYPES[self.param_dtype]
+
+    @property
+    def cdtype(self):
+        return _DTYPES[self.compute_dtype]
+
+    @property
+    def kvdtype(self):
+        return _DTYPES[self.cache_dtype]
+
+
+TRAIN_RUN = RunConfig()
+SERVE_RUN = RunConfig(param_dtype="bfloat16", remat="none")
+
+
+def for_shape(shape_kind: str) -> RunConfig:
+    return TRAIN_RUN if shape_kind == "train" else SERVE_RUN

@@ -1,0 +1,279 @@
+"""Emulation atoms: small self-contained consumers of one resource type.
+
+Paper §IV-B, adapted per DESIGN.md §2:
+
+  * ComputeAtom    — MXU/FPU matmul burn loop.  ``efficiency`` < 1
+                     throttles it exactly like the paper's loop-rate knob
+                     (emulate an app running below peak).  Backends: jnp
+                     (XLA loop) or the Pallas kernel in
+                     ``repro.kernels.compute_atom`` (TPU target).
+  * MemoryAtom     — streams a target byte count through the memory system
+                     (Pallas: HBM→VMEM block copies; jnp: scaled copy loop).
+  * CollectiveAtom — moves an exact wire-byte count over a mesh axis with
+                     psum/all_gather/ppermute under shard_map (the paper's
+                     "planned" network atom, first-class here).
+  * StorageAtom    — block-wise file write/read (libc read/write, unchanged
+                     from the paper; block size is the tunable the paper
+                     discusses in §IV-E.3).
+
+Atoms expose ``plan(amount) -> callable`` so the emulator can pre-compile,
+and ``seconds(amount, hw)`` — the model cost used by the TTC predictor.
+"""
+from __future__ import annotations
+
+import math
+import os
+import tempfile
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calibrate import HostCalibration
+from repro.core.hardware import HardwareSpec
+
+
+class Atom:
+    resource = "abstract"
+
+    def plan(self, amount: float) -> Callable[[], float]:
+        """Returns a thunk that consumes ``amount`` and returns actual amount."""
+        raise NotImplementedError
+
+    def seconds(self, amount: float, hw: HardwareSpec) -> float:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Compute
+# ---------------------------------------------------------------------------
+
+class ComputeAtom(Atom):
+    resource = "flops"
+
+    def __init__(self, calib: Optional[HostCalibration] = None,
+                 tile: int = 256, efficiency: float = 1.0,
+                 backend: str = "jnp"):
+        """``efficiency``: the paper's loop-rate knob — the profiled
+        application's measured efficiency (achieved/peak); the atom burns
+        flops/efficiency raw loop flops so wall time matches an application
+        running that far below the atom's own (near-peak) rate."""
+        self.calib = calib
+        self.tile = tile
+        self.efficiency = max(efficiency, 1e-6)
+        self.backend = backend
+        self._fn: Optional[Callable] = None
+
+    def _loop_fn(self):
+        # iters is a traced argument: ONE compilation serves every sample.
+        if self._fn is None:
+            if self.backend == "pallas":
+                from repro.kernels.compute_atom import ops as catom_ops
+                tile = self.tile
+
+                def burn(x, iters):
+                    del iters  # pallas path: static per-call (rarely used)
+                    return catom_ops.burn(x, iters=1, tile=tile)
+                self._fn = burn
+            else:
+                def burn(x, iters):
+                    def body(_, c):
+                        return jnp.tanh(c @ c) * 0.5 + 0.5
+                    return jax.lax.fori_loop(0, iters, body, x)
+                self._fn = jax.jit(burn)
+        return self._fn
+
+    def flops_per_iter(self) -> float:
+        return 2.0 * self.tile ** 3
+
+    def plan(self, flops: float) -> Callable[[], float]:
+        iters = max(int(round(flops / self.flops_per_iter()
+                              / self.efficiency)), 0)
+        if iters == 0:
+            return lambda: 0.0
+        fn = self._loop_fn()
+        x = jnp.eye(self.tile, dtype=jnp.float32) * 0.5
+
+        def run():
+            fn(x, iters).block_until_ready()
+            return flops
+        return run
+
+    def seconds(self, flops: float, hw: HardwareSpec) -> float:
+        peak = hw.peak_flops * hw.flops_derate
+        return flops / peak if peak else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Memory
+# ---------------------------------------------------------------------------
+
+class MemoryAtom(Atom):
+    resource = "hbm_bytes"
+
+    def __init__(self, calib: Optional[HostCalibration] = None,
+                 block_bytes: int = 1 << 24, backend: str = "jnp"):
+        self.calib = calib
+        self.block_bytes = block_bytes
+        self.backend = backend
+        self._fns: Dict[int, Callable] = {}
+
+    def _stream_fn(self):
+        if not self._fns:
+            if self.backend == "pallas":
+                from repro.kernels.memory_atom import ops as matom_ops
+                bb = self.block_bytes
+
+                def stream(x, iters):
+                    return matom_ops.stream(x, iters=int(iters),
+                                            block_bytes=bb)
+                self._fns[0] = stream
+            else:
+                def stream(x, iters):
+                    def body(_, c):
+                        return c * 1.0000001
+                    return jax.lax.fori_loop(0, iters, body, x)
+                self._fns[0] = jax.jit(stream)
+        return self._fns[0]
+
+    def plan(self, nbytes: float) -> Callable[[], float]:
+        per_iter = 2.0 * self.block_bytes          # read + write per pass
+        iters = max(int(round(nbytes / per_iter)), 0)
+        if iters == 0:
+            return lambda: 0.0
+        fn = self._stream_fn()
+        x = jnp.ones((self.block_bytes // 4,), jnp.float32)
+
+        def run():
+            fn(x, iters).block_until_ready()
+            return iters * per_iter
+        return run
+
+    def seconds(self, nbytes: float, hw: HardwareSpec) -> float:
+        bw = hw.hbm_bw * hw.hbm_derate
+        return nbytes / bw if bw else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Collective (network)
+# ---------------------------------------------------------------------------
+
+class CollectiveAtom(Atom):
+    resource = "ici_bytes"
+
+    def __init__(self, mesh=None, axis: Optional[str] = None,
+                 kind: str = "all-reduce"):
+        self.mesh = mesh
+        self.axis = axis or (mesh.axis_names[-1] if mesh is not None else None)
+        self.kind = kind
+        self._fns: Dict[int, Callable] = {}
+
+    def _coll_fn(self, n_elems: int):
+        if n_elems not in self._fns:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            mesh, axis, kind = self.mesh, self.axis, self.kind
+
+            def local(x):
+                if kind == "all-gather":
+                    return jax.lax.all_gather(x, axis)
+                if kind == "collective-permute":
+                    n = mesh.shape[axis]
+                    perm = [(i, (i + 1) % n) for i in range(n)]
+                    return jax.lax.ppermute(x, axis, perm)
+                return jax.lax.psum(x, axis)
+
+            fn = shard_map(local, mesh=mesh, in_specs=P(axis),
+                           out_specs=P(axis) if kind not in
+                           ("all-gather",) else P(axis, None),
+                           check_rep=False)
+            self._fns[n_elems] = jax.jit(fn)
+        return self._fns[n_elems]
+
+    def plan(self, wire_bytes: float) -> Callable[[], float]:
+        if self.mesh is None or wire_bytes <= 0:
+            return lambda: 0.0
+        n = self.mesh.shape[self.axis]
+        # invert the ring model on the PER-CHIP shard:
+        # wire/chip = factor * shard_bytes  (all-reduce: 2*(n-1)/n)
+        factor = {"all-reduce": 2.0 * (n - 1) / n,
+                  "all-gather": (n - 1) / n,
+                  "collective-permute": 1.0}.get(self.kind, 2.0 * (n - 1) / n)
+        shard_bytes = wire_bytes / max(factor, 1e-9)
+        n_elems = max(int(shard_bytes / 4) * n, n)
+        n_elems = (n_elems // n) * n or n
+        fn = self._coll_fn(n_elems)
+        x = jnp.ones((n_elems,), jnp.float32)
+
+        def run():
+            jax.block_until_ready(fn(x))
+            return wire_bytes
+        return run
+
+    def seconds(self, wire_bytes: float, hw: HardwareSpec) -> float:
+        bw = hw.ici_bw * hw.ici_derate
+        return wire_bytes / bw if bw else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Storage
+# ---------------------------------------------------------------------------
+
+class StorageAtom(Atom):
+    resource = "storage_bytes"
+
+    def __init__(self, calib: Optional[HostCalibration] = None,
+                 block_bytes: int = 1 << 20, directory: Optional[str] = None):
+        self.calib = calib
+        self.block_bytes = block_bytes
+        self.dir = directory or tempfile.gettempdir()
+        self._buf = os.urandom(block_bytes)
+
+    def plan_write(self, nbytes: float) -> Callable[[], float]:
+        blocks = max(int(nbytes // self.block_bytes), 0)
+        if blocks == 0:
+            return lambda: 0.0
+        path = os.path.join(self.dir, f"synapse_atom_{os.getpid()}.bin")
+
+        def run():
+            with open(path, "wb") as f:
+                for _ in range(blocks):
+                    f.write(self._buf)
+                f.flush()
+                os.fsync(f.fileno())
+            return blocks * self.block_bytes
+        return run
+
+    def plan_read(self, nbytes: float) -> Callable[[], float]:
+        blocks = max(int(nbytes // self.block_bytes), 0)
+        path = os.path.join(self.dir, f"synapse_atom_{os.getpid()}.bin")
+        if blocks == 0:
+            return lambda: 0.0
+
+        def run():
+            if not os.path.exists(path):
+                with open(path, "wb") as f:
+                    for _ in range(blocks):
+                        f.write(self._buf)
+            done = 0
+            with open(path, "rb") as f:
+                while done < blocks * self.block_bytes:
+                    chunk = f.read(self.block_bytes)
+                    if not chunk:
+                        f.seek(0)
+                        continue
+                    done += len(chunk)
+            return float(done)
+        return run
+
+    def plan(self, nbytes: float):
+        return self.plan_write(nbytes)
+
+    def seconds(self, nbytes: float, hw: HardwareSpec) -> float:
+        if self.calib is None:
+            return 0.0
+        return nbytes / self.calib.storage_write_bps

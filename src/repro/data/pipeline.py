@@ -1,0 +1,79 @@
+"""Deterministic synthetic token pipeline — sharded, seedable, resumable.
+
+The stream is a counter-based PRF (threefry via jax.random, folded on the
+global step), so (a) any batch is reproducible from (seed, step) alone —
+exact-resume needs only the step number in the checkpoint manifest; (b) each
+data shard draws a disjoint slice of the global batch, so multi-host loading
+needs no coordination (every host computes its own slice), the property that
+actually matters at 1000+ nodes.
+
+The "language" generated is a tiny order-k Markov chain over the vocab, so
+cross-entropy has learnable structure (loss decreases measurably within a
+few hundred steps — used by tests and the train example).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    structure: float = 0.8      # P(follow the Markov rule) vs uniform noise
+
+
+class SyntheticLM:
+    """tokens[t+1] = (a * tokens[t] + b) mod V with prob ``structure``."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        v = cfg.vocab_size
+        self.a = 31 % v or 1
+        self.b = 17 % v
+
+    def batch_at(self, step: int, *, shard_index: int = 0,
+                 num_shards: int = 1) -> Dict[str, jnp.ndarray]:
+        cfg = self.cfg
+        assert cfg.global_batch % num_shards == 0
+        local_b = cfg.global_batch // num_shards
+        key = jax.random.fold_in(jax.random.key(cfg.seed), step)
+        key = jax.random.fold_in(key, shard_index)
+        k1, k2, k3 = jax.random.split(key, 3)
+        v = cfg.vocab_size
+        first = jax.random.randint(k1, (local_b, 1), 0, v)
+        noise = jax.random.randint(k2, (local_b, cfg.seq_len), 0, v)
+        follow = jax.random.bernoulli(k3, self.cfg.structure,
+                                      (local_b, cfg.seq_len))
+
+        def step_fn(tok, inp):
+            nz, fl = inp
+            nxt = jnp.where(fl, (self.a * tok + self.b) % v, nz)
+            return nxt, nxt
+
+        _, seq = jax.lax.scan(
+            step_fn, first[:, 0],
+            (noise.T, follow.T))
+        seq = jnp.concatenate([first, seq.T], axis=1)    # [b, S+1]
+        return {"tokens": seq[:, :-1].astype(jnp.int32),
+                "targets": seq[:, 1:].astype(jnp.int32)}
+
+    def iterate(self, start_step: int = 0, *, shard_index: int = 0,
+                num_shards: int = 1) -> Iterator[Dict[str, jnp.ndarray]]:
+        step = start_step
+        while True:
+            yield self.batch_at(step, shard_index=shard_index,
+                                num_shards=num_shards)
+            step += 1
+
+    def state(self, step: int) -> Dict:
+        """Everything needed for exact resume (goes into the ckpt manifest)."""
+        return {"seed": self.cfg.seed, "step": step,
+                "structure": self.cfg.structure}

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+Each kernel is a subpackage: ``kernel.py`` (pl.pallas_call + explicit
+BlockSpec VMEM tiling), ``ops.py`` (jit'd public wrapper), ``ref.py``
+(pure-jnp oracle).  Validated in interpret mode on CPU; TPU is the target.
+"""

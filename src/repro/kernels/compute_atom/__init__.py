@@ -1,0 +1,1 @@
+from repro.kernels.compute_atom import ops, ref  # noqa

@@ -1,0 +1,39 @@
+"""Synapse compute atom on the MXU.
+
+The paper's compute atom is "a loop of assembly code that efficiently
+performs a matrix multiplication", sized to stay cache-resident, whose loop
+rate throttles emulated efficiency.  TPU translation: a VMEM-resident
+``tile × tile`` f32 matmul chained ``iters`` times through the MXU —
+the tile never leaves VMEM, so sustained FLOP/s ~ MXU peak, and ``duty``
+(handled in ops.py by scaling iters) is the paper's efficiency knob.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _burn_kernel(x_ref, o_ref, *, iters: int):
+    x = x_ref[...]
+    def body(_, y):
+        # renormalizing keeps values bounded over arbitrarily many iters
+        y = jnp.dot(y, x, preferred_element_type=jnp.float32)
+        return y * 0.5 + 0.25
+    o_ref[...] = jax.lax.fori_loop(0, iters, body, x)
+
+
+def burn_tile(x: jax.Array, *, iters: int, interpret: bool = True):
+    """x: [tile, tile] f32 -> same shape; executes ``iters`` MXU matmuls."""
+    tile = x.shape[0]
+    assert x.shape == (tile, tile) and tile % 8 == 0, x.shape
+    return pl.pallas_call(
+        functools.partial(_burn_kernel, iters=iters),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((tile, tile), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((tile, tile), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((tile, tile), jnp.float32),
+        interpret=interpret,
+    )(x)

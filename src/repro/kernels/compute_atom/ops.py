@@ -1,0 +1,18 @@
+"""Jit'd wrapper used by repro.core.atoms.ComputeAtom (backend="pallas")."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.compute_atom import kernel
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "tile", "interpret"))
+def _burn(x, *, iters: int, tile: int, interpret: bool = True):
+    return kernel.burn_tile(x, iters=iters, interpret=interpret)
+
+
+def burn(x=None, *, iters: int, tile: int = 256, interpret: bool = True):
+    if x is None:
+        x = jnp.eye(tile, dtype=jnp.float32) * 0.5
+    return _burn(x, iters=iters, tile=tile, interpret=interpret)

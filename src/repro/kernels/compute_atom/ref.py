@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the compute atom."""
+import jax
+import jax.numpy as jnp
+
+
+def burn_tile(x, *, iters: int):
+    def body(_, y):
+        y = jnp.dot(y, x, preferred_element_type=jnp.float32)
+        return y * 0.5 + 0.25
+    return jax.lax.fori_loop(0, iters, body, x)
+
+
+def flops(tile: int, iters: int) -> float:
+    return 2.0 * tile ** 3 * iters

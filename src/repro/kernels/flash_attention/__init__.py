@@ -1,0 +1,1 @@
+from repro.kernels.flash_attention import ops, ref  # noqa

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle: dense softmax attention over [BH, S, hd] layout."""
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None, group: int = 1):
+    BH, Sq, hd = q.shape
+    if group > 1:
+        k = jnp.repeat(k, group, axis=0)
+        v = jnp.repeat(v, group, axis=0)
+    Sk = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    ok = (kp <= qp) if causal else jnp.ones((Sq, Sk), bool)
+    if window is not None:
+        ok = jnp.logical_and(ok, qp - kp < window)
+    s = jnp.where(ok[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v)

@@ -1,0 +1,1 @@
+from repro.kernels.memory_atom import ops, ref  # noqa

@@ -1,0 +1,18 @@
+"""Jit'd wrapper used by repro.core.atoms.MemoryAtom (backend="pallas")."""
+import functools
+
+import jax
+
+from repro.kernels.memory_atom import kernel
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "block", "interpret"))
+def stream(x, *, iters: int, block: int = 1 << 15,
+           block_bytes: int = 0, interpret: bool = True):
+    if block_bytes:
+        block = min(block_bytes // x.dtype.itemsize, x.shape[0])
+    block = min(block, x.shape[0])
+
+    def body(_, y):
+        return kernel.stream_pass(y, block=block, interpret=interpret)
+    return jax.lax.fori_loop(0, iters, body, x)

@@ -1,0 +1,23 @@
+"""Production mesh builders (assignment MULTI-POD DRY-RUN step 1).
+
+Functions, not module-level constants, so importing this module never touches
+jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def describe(mesh) -> dict:
+    return {name: int(size) for name, size in
+            zip(mesh.axis_names, mesh.devices.shape)}

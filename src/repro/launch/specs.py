@@ -1,0 +1,134 @@
+"""ShapeDtypeStruct stand-ins for every model input (assignment step 2).
+
+``input_specs(cfg, shape, mesh, run)`` returns sharded, weak-type-correct
+abstract inputs for the (arch × shape) cell — a training batch, a prefill
+request batch, or a decode step (tokens + KV/SSM cache) — with no device
+allocation.  ``rules_for_shape`` picks the rule table (train / prefill /
+decode / long-decode context-parallel).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.run import RunConfig
+from repro.models.model_zoo import Model, build_model
+from repro.parallel.sharding import (DECODE_RULES, LONG_DECODE_RULES,
+                                     PREFILL_RULES, TRAIN_RULES, Rules,
+                                     make_rules, use_sharding)
+
+
+def rules_table_for(shape: ShapeConfig, run: Optional[RunConfig] = None) -> Dict:
+    if shape.kind == "train":
+        if run is not None and run.sharding_mode == "fsdp":
+            from repro.parallel.sharding import FSDP_RULES
+            return FSDP_RULES
+        return TRAIN_RULES
+    if shape.kind == "prefill":
+        return PREFILL_RULES
+    if shape.name == "long_500k":
+        return LONG_DECODE_RULES
+    return DECODE_RULES
+
+
+def _sds(shape, dtype, mesh, rules: Optional[Rules], *axes):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    spec = rules.pspec_checked(tuple(shape), axes)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, rules,
+                run: RunConfig) -> Dict[str, Any]:
+    """Abstract train/prefill batch for this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32, cdt = jnp.int32, run.cdtype
+    out: Dict[str, Any] = {}
+    if cfg.family == "encdec":
+        out["src_embeds"] = _sds((B, S // 2, cfg.d_model), cdt, mesh, rules,
+                                 "batch", "seq", None)
+        out["tgt_tokens"] = _sds((B, S // 2), i32, mesh, rules, "batch", "seq")
+        if shape.kind == "train":
+            out["targets"] = _sds((B, S // 2), i32, mesh, rules, "batch", "seq")
+        return out
+    if cfg.frontend == "vision_patches":
+        out["embeds"] = _sds((B, S, cfg.d_model), cdt, mesh, rules,
+                             "batch", "seq", None)
+        out["positions"] = _sds((3, B, S), i32, mesh, rules,
+                                None, "batch", "seq")
+    elif cfg.frontend == "audio_frames":
+        out["embeds"] = _sds((B, S, cfg.d_model), cdt, mesh, rules,
+                             "batch", "seq", None)
+    else:
+        out["tokens"] = _sds((B, S), i32, mesh, rules, "batch", "seq")
+    if shape.kind == "train":
+        out["targets"] = _sds((B, S), i32, mesh, rules, "batch", "seq")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cache specs (decode cells): eval_shape the init then attach shardings
+# ---------------------------------------------------------------------------
+
+_CACHE_AXES = {
+    # leaf key -> logical axes per rank (stacked leading layer dim)
+    "k": {5: (None, "batch", "cache_seq", None, "head_dim")},
+    "v": {5: (None, "batch", "cache_seq", None, "head_dim")},
+    "pos": {2: (None, "batch")},
+    "conv": {4: (None, "batch", None, "act_ssm_inner")},
+    "ssm": {5: (None, "batch", "act_ssm_heads", None, None)},
+    "cross_k": {5: (None, "batch", "cache_seq", None, "head_dim")},
+    "cross_v": {5: (None, "batch", "cache_seq", None, "head_dim")},
+}
+
+
+def cache_specs(model: Model, batch: int, max_len: int, mesh, rules,
+                src_len: Optional[int] = None):
+    if model.cfg.family == "encdec":
+        shapes = jax.eval_shape(
+            lambda: model.init_cache(batch, max_len, src_len=src_len))
+    else:
+        shapes = jax.eval_shape(lambda: model.init_cache(batch, max_len))
+
+    def attach(path, aval):
+        key = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                key = p.key
+                break
+        axes_by_rank = _CACHE_AXES.get(key, {})
+        axes = axes_by_rank.get(len(aval.shape),
+                                tuple([None] * len(aval.shape)))
+        return _sds(aval.shape, aval.dtype, mesh, rules, *axes)
+
+    return jax.tree_util.tree_map_with_path(attach, shapes)
+
+
+def decode_token_specs(cfg: ModelConfig, batch: int, mesh, rules):
+    return _sds((batch, 1), jnp.int32, mesh, rules, "batch", "seq")
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, run: RunConfig):
+    """Full abstract inputs for the cell's step function.
+
+    train  -> (state_specs_handled_elsewhere, batch)
+    prefill-> (batch,)
+    decode -> (tokens, cache)
+    """
+    rules = make_rules(mesh, rules_table_for(shape, run))
+    if shape.kind in ("train", "prefill"):
+        return (batch_specs(cfg, shape, mesh, rules, run),)
+    # decode: cache sized to seq_len, batch of single tokens
+    model = build_model(cfg, run)
+    B, S = shape.global_batch, shape.seq_len
+    src_len = S // 2 if cfg.family == "encdec" else None
+    max_len = S // 2 if cfg.family == "encdec" else S
+    cache = cache_specs(model, B, max_len, mesh, rules, src_len=src_len)
+    toks = decode_token_specs(cfg, B, mesh, rules)
+    return (toks, cache)

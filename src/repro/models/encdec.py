@@ -1,0 +1,206 @@
+"""Encoder-decoder backbone (SeamlessM4T-medium).
+
+The audio frontend is a stub per the assignment: ``input_specs()`` feeds
+precomputed frame embeddings [B, S_src, D].  Shapes: an assigned LM cell of
+``seq_len`` tokens maps to src = tgt = seq_len/2 so total tokens match the
+decoder-only cells (DESIGN.md §4).
+
+Decode carries two caches per decoder layer: the causal self-attention cache
+and the (write-once at prefill) cross-attention K/V over the encoder output.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.configs.run import RunConfig
+from repro.models.layers import (attend_blocked, attend_decode, attend_full,
+                                 attention, def_attention, def_mlp,
+                                 def_rmsnorm, mlp, rmsnorm)
+from repro.models.params import PDef, stack_pdefs
+from repro.models.transformer import _attn_run, _remat_wrap, _stack_layers, \
+    init_attn_cache
+from repro.parallel.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def def_encoder_block(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {"ln_attn": def_rmsnorm(d), "attn": def_attention(cfg),
+            "ln_mlp": def_rmsnorm(d), "mlp": def_mlp(d, cfg.d_ff)}
+
+
+def def_decoder_block(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {"ln_self": def_rmsnorm(d), "self_attn": def_attention(cfg),
+            "ln_cross": def_rmsnorm(d), "cross_attn": def_attention(cfg),
+            "ln_mlp": def_rmsnorm(d), "mlp": def_mlp(d, cfg.d_ff)}
+
+
+def def_encdec(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "embed": PDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed")),
+        "enc_layers": stack_pdefs(def_encoder_block(cfg),
+                                  cfg.num_encoder_layers),
+        "enc_ln_final": def_rmsnorm(cfg.d_model),
+        "dec_layers": stack_pdefs(def_decoder_block(cfg), cfg.num_layers),
+        "ln_final": def_rmsnorm(cfg.d_model),
+        "lm_head": PDef((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                        init="scaled"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cross attention
+# ---------------------------------------------------------------------------
+
+def _proj_kv(p, enc_out, cfg):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(enc_out.dtype))
+    return k, v
+
+
+def cross_attention(p, x, *, cfg: ModelConfig, run: RunConfig,
+                    enc_out=None, kv=None):
+    """q from x [B,St,D]; k/v from enc_out or precomputed ``kv`` (decode)."""
+    B, S, D = x.shape
+    hq, hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = hq // hk
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    if kv is None:
+        k, v = _proj_kv(p, enc_out, cfg)
+    else:
+        k, v = kv
+    qg = q.reshape(B, S, hk, G, hd)
+    q_pos = jnp.arange(S)
+    k_pos = jnp.arange(k.shape[1])
+    if S == 1:
+        # decode: full (non-causal) attention over the whole cross cache
+        pos = jnp.full((B,), k.shape[1] - 1, jnp.int32)
+        out = attend_decode(qg, k, v, cur_pos=pos, window=None, softcap=None)
+    elif S > run.blocked_threshold:
+        out = attend_blocked(qg, k, v, q_pos=q_pos, k_pos=k_pos, causal=False,
+                             window=None, softcap=None,
+                             block_q=run.block_q, block_kv=run.block_kv)
+    else:
+        out = attend_full(qg, k, v, q_pos=q_pos, k_pos=k_pos, causal=False,
+                          window=None, softcap=None)
+    out = out.reshape(B, S, hq, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def encode(params, src_embeds, *, cfg: ModelConfig, run: RunConfig):
+    x = src_embeds.astype(run.cdtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), run.cdtype)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = shard(x, "batch", "seq_shard", "embed")
+
+    def body(xx, pl):
+        h = rmsnorm(pl["ln_attn"], xx, cfg.norm_eps)
+        out, _ = attention(pl["attn"], h, cfg=cfg, positions=positions,
+                           run=_attn_run(run), causal=False)
+        xx = xx + out
+        xx = shard(xx, "batch", "seq_shard", "embed")
+        h = rmsnorm(pl["ln_mlp"], xx, cfg.norm_eps)
+        xx = xx + mlp(pl["mlp"], h)
+        return shard(xx, "batch", "seq_shard", "embed"), None
+
+    x, _ = jax.lax.scan(lambda c, pl: _remat_wrap(body, run)(c, pl),
+                        x, params["enc_layers"])
+    return rmsnorm(params["enc_ln_final"], x, cfg.norm_eps)
+
+
+def forward_encdec(params, batch, *, cfg: ModelConfig, run: RunConfig,
+                   cache=None, decode=False):
+    """Returns (decoder hidden, new_cache|None, aux).
+
+    train/prefill: batch = {src_embeds [B,Ss,D], tgt_tokens [B,St]}
+    decode:        batch = {tokens [B,1]}, cache from prefill
+    """
+    if decode:
+        assert cache is not None
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(run.cdtype)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), run.cdtype)
+        positions = cache["self"]["pos"][0][:, None]
+        enc_out = None
+    else:
+        enc_out = encode(params, batch["src_embeds"], cfg=cfg, run=run)
+        x = jnp.take(params["embed"], batch["tgt_tokens"], axis=0).astype(run.cdtype)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), run.cdtype)
+        B, St, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(St)[None], (B, St))
+        x = shard(x, "batch", "seq_shard", "embed")
+
+    def body(xx, pl, self_cl, cross_kv):
+        h = rmsnorm(pl["ln_self"], xx, cfg.norm_eps)
+        out, self_nc = attention(pl["self_attn"], h, cfg=cfg,
+                                 positions=positions, run=_attn_run(run),
+                                 cache=self_cl, decode=decode)
+        xx = xx + out
+        h = rmsnorm(pl["ln_cross"], xx, cfg.norm_eps)
+        if decode:
+            cross_out = cross_attention(pl["cross_attn"], h, cfg=cfg, run=run,
+                                        kv=cross_kv)
+            new_kv = cross_kv
+        else:
+            cross_out = cross_attention(pl["cross_attn"], h, cfg=cfg, run=run,
+                                        enc_out=enc_out)
+            new_kv = _proj_kv(pl["cross_attn"], enc_out, cfg) \
+                if self_cl is not None else None
+        xx = xx + cross_out
+        h = rmsnorm(pl["ln_mlp"], xx, cfg.norm_eps)
+        xx = xx + mlp(pl["mlp"], h)
+        if not decode:
+            xx = shard(xx, "batch", "seq_shard", "embed")
+        return xx, self_nc, new_kv
+
+    if cache is None:
+        def scan_fn(carry, pl):
+            y, _, _ = _remat_wrap(
+                lambda c, p_: body(c, p_, None, None), run)(carry, pl)
+            return y, None
+        x, _ = jax.lax.scan(scan_fn, x, params["dec_layers"])
+        new_cache = None
+    else:
+        def scan_fn(carry, xs):
+            pl, self_cl, ck, cv = xs
+            y, self_nc, new_kv = _remat_wrap(body, run)(
+                carry, pl, self_cl, (ck, cv))
+            return y, (self_nc, new_kv[0], new_kv[1])
+        x, (self_cache, ck, cv) = jax.lax.scan(
+            scan_fn, x,
+            (params["dec_layers"], cache["self"],
+             cache["cross_k"], cache["cross_v"]))
+        new_cache = {"self": self_cache, "cross_k": ck, "cross_v": cv}
+
+    x = rmsnorm(params["ln_final"], x, cfg.norm_eps)
+    return x, new_cache, {}
+
+
+def init_encdec_cache(cfg: ModelConfig, run: RunConfig, batch: int,
+                      tgt_len: int, src_len: int):
+    hk, hd = cfg.num_kv_heads, cfg.head_dim
+    self_cache = _stack_layers(
+        init_attn_cache(cfg, batch, tgt_len, run.kvdtype), cfg.num_layers)
+    zeros_kv = jnp.zeros((cfg.num_layers, batch, src_len, hk, hd), run.kvdtype)
+    return {"self": self_cache,
+            "cross_k": shard_5d(zeros_kv), "cross_v": shard_5d(zeros_kv)}
+
+
+def shard_5d(x):
+    return shard(x, None, "batch", "cache_seq", None, "head_dim")

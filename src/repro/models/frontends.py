@@ -1,0 +1,55 @@
+"""Modality frontend STUBS for the [audio]/[vlm] assigned architectures.
+
+Per the assignment these entries specify the transformer BACKBONE only; the
+modality frontend supplies precomputed frame/patch embeddings.  These helpers
+build those embeddings (random for smoke tests, ShapeDtypeStructs for the
+dry-run) plus the M-RoPE position streams for qwen2-vl.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def audio_frame_embeddings(rng, batch: int, frames: int, d_model: int,
+                           dtype=jnp.float32):
+    """Stub for the speech encoder frontend (fbank -> conformer adapter)."""
+    return 0.02 * jax.random.normal(rng, (batch, frames, d_model), dtype)
+
+
+def vision_patch_embeddings(rng, batch: int, patches: int, d_model: int,
+                            dtype=jnp.float32):
+    """Stub for the ViT patch-merger frontend (dynamic-resolution patches)."""
+    return 0.02 * jax.random.normal(rng, (batch, patches, d_model), dtype)
+
+
+def mrope_positions(batch: int, seq: int, *, grid: Tuple[int, int, int] = None):
+    """M-RoPE (t, h, w) position streams, [3, B, S].
+
+    Text tokens advance all three streams together; vision tokens advance
+    (t, h, w) according to their patch-grid coordinates.  ``grid=(T,H,W)``
+    places a T*H*W vision block at the start of the sequence, text after.
+    """
+    if grid is None:
+        p = np.broadcast_to(np.arange(seq)[None], (batch, seq))
+        return jnp.asarray(np.broadcast_to(p[None], (3, batch, seq)),
+                           jnp.int32)
+    T, H, W = grid
+    n_vis = T * H * W
+    assert n_vis <= seq, (grid, seq)
+    t_ids = np.repeat(np.arange(T), H * W)
+    h_ids = np.tile(np.repeat(np.arange(H), W), T)
+    w_ids = np.tile(np.arange(W), T * H)
+    # text continues after the max vision position
+    start = max(T, H, W)
+    text = np.arange(seq - n_vis) + start
+    pos = np.stack([np.concatenate([t_ids, text]),
+                    np.concatenate([h_ids, text]),
+                    np.concatenate([w_ids, text])])          # [3, S]
+    return jnp.asarray(np.broadcast_to(pos[:, None], (3, batch, seq)),
+                       jnp.int32)

@@ -1,0 +1,95 @@
+"""Model factory: one uniform interface over all assigned architectures.
+
+``build_model(cfg, run)`` returns a ``Model`` whose members close over the
+config — everything downstream (train step, serve engine, dry-run, Synapse
+profiler) is family-agnostic.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.run import RunConfig
+from repro.models import encdec as encdec_lib
+from repro.models import hybrid as hybrid_lib
+from repro.models import transformer as tr
+from repro.models.params import (abstract_params, count_params, init_params,
+                                 spec_tree)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    run: RunConfig
+    pdefs: Dict[str, Any]
+    forward: Callable          # (params, batch, cache=None, decode=False)
+    init_cache: Callable       # (batch, max_len[, src_len]) -> cache
+    logits: Callable           # (params, hidden) -> logits
+
+    def init(self, rng):
+        return init_params(self.pdefs, rng, self.run.pdtype)
+
+    def abstract(self, mesh=None, rules=None):
+        return abstract_params(self.pdefs, self.run.pdtype, mesh, rules)
+
+    def param_specs(self, rules):
+        return spec_tree(self.pdefs, rules)
+
+    def num_params(self) -> int:
+        return count_params(self.pdefs)
+
+
+def build_model(cfg: ModelConfig, run: RunConfig) -> Model:
+    if cfg.family == "encdec":
+        pdefs = encdec_lib.def_encdec(cfg)
+
+        def forward(params, batch, cache=None, decode=False):
+            return encdec_lib.forward_encdec(params, batch, cfg=cfg, run=run,
+                                             cache=cache, decode=decode)
+
+        def initc(batch, max_len, src_len=None):
+            return encdec_lib.init_encdec_cache(
+                cfg, run, batch, max_len, src_len or max_len)
+
+    elif cfg.family == "ssm":
+        pdefs = hybrid_lib.def_ssm_lm(cfg)
+        block = hybrid_lib.make_ssm_block(cfg, run)
+
+        def forward(params, batch, cache=None, decode=False):
+            return tr.forward_stack(params, batch, cfg=cfg, run=run,
+                                    block_fn=block, cache=cache, decode=decode)
+
+        def initc(batch, max_len, src_len=None):
+            del max_len
+            return hybrid_lib.init_ssm_cache(cfg, run, batch)
+
+    elif cfg.family == "hybrid":
+        pdefs = hybrid_lib.def_hybrid_lm(cfg)
+        block = hybrid_lib.make_hybrid_block(cfg, run)
+
+        def forward(params, batch, cache=None, decode=False):
+            return tr.forward_stack(params, batch, cfg=cfg, run=run,
+                                    block_fn=block, cache=cache, decode=decode)
+
+        def initc(batch, max_len, src_len=None):
+            return hybrid_lib.init_hybrid_cache(cfg, run, batch, max_len)
+
+    else:  # dense | moe | vlm (decoder-only transformer)
+        pdefs = tr.def_lm(cfg)
+
+        def forward(params, batch, cache=None, decode=False):
+            return tr.forward_lm(params, batch, cfg=cfg, run=run,
+                                 cache=cache, decode=decode)
+
+        def initc(batch, max_len, src_len=None):
+            return tr.init_cache(cfg, run, batch, max_len)
+
+    def logits(params, hidden):
+        return tr.lm_logits(params, hidden, cfg, run)
+
+    return Model(cfg=cfg, run=run, pdefs=pdefs, forward=forward,
+                 init_cache=initc, logits=logits)

@@ -1,0 +1,273 @@
+"""Mamba-2 (SSD — state-space duality) block.
+
+Training/prefill uses the chunked matmul ("SSD") form from arXiv:2405.21060:
+within a chunk the recurrence is expanded into attention-like matmuls (MXU
+friendly); across chunks a small [H, P, N] state is carried by a scan.  Decode
+is the O(1) recurrence step on a persistent (conv window, SSM state) cache.
+
+A pure recurrent oracle (``ssd_reference``) is kept for tests: the chunked
+form must match it to fp tolerance for every shape swept in tests/.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import PDef
+from repro.parallel.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# Parameter defs
+# ---------------------------------------------------------------------------
+
+def def_mamba2(cfg: ModelConfig) -> Dict[str, Any]:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = cfg.d_inner
+    nh = cfg.ssm_heads
+    G, N = s.ngroups, s.state_dim
+    conv_ch = di + 2 * G * N
+    return {
+        # in_proj -> [z (di), x (di), B (G*N), C (G*N), dt (nh)]
+        "in_proj": PDef((d, 2 * di + 2 * G * N + nh), ("embed", "ssm_inner"),
+                        init="scaled"),
+        "conv_w": PDef((s.conv_dim, conv_ch), (None, "ssm_inner"), init="scaled"),
+        "conv_b": PDef((conv_ch,), ("ssm_inner",), init="zeros"),
+        "A_log": PDef((nh,), ("ssm_heads",), init="ones"),
+        "dt_bias": PDef((nh,), ("ssm_heads",), init="zeros"),
+        "D": PDef((nh,), ("ssm_heads",), init="ones"),
+        "norm": PDef((di,), ("ssm_inner",), init="zeros"),
+        "out_proj": PDef((di, d), ("ssm_inner", "embed"), init="scaled"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Core SSD math
+# ---------------------------------------------------------------------------
+
+def _split_proj(cfg: ModelConfig, proj):
+    s = cfg.ssm
+    di, nh = cfg.d_inner, cfg.ssm_heads
+    G, N = s.ngroups, s.state_dim
+    z, xc, Bc, Cc, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + G * N, 2 * di + 2 * G * N], axis=-1)
+    return z, xc, Bc, Cc, dt
+
+
+def _causal_conv(xBC, w, b, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv, width K.  xBC: [B,L,ch]; w: [K,ch].
+
+    ``state``: [B, K-1, ch] trailing context (decode); returns (out, new_state).
+    """
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)                # [B, L+K-1, ch]
+    out = sum(xp[:, i:i + xBC.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    out = out + b[None, None, :]
+    new_state = xp[:, -(K - 1):, :] if K > 1 else pad[:, :0]
+    return jax.nn.silu(out), new_state
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, *, chunk: int,
+                initial_state: Optional[jnp.ndarray] = None,
+                return_state: bool = False):
+    """Chunked SSD scan.
+
+    x  : [B, L, H, P]   (inputs per head)
+    dt : [B, L, H]      (positive step sizes, softplus+bias already applied)
+    A  : [H]            (negative decay rates)
+    Bm : [B, L, G, N]   Cm: [B, L, G, N]
+    Returns y: [B, L, H, P] (+ final state [B,H,P,N] if requested).
+    """
+    B, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    if L % chunk != 0:
+        # zero-pad to a chunk multiple: dt=0 rows are state-neutral
+        # (decay = exp(0·A) = 1, contribution = dt·B⊗x = 0).
+        pad = chunk - L % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        out = ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk,
+                          initial_state=initial_state,
+                          return_state=return_state)
+        if return_state:
+            return out[0][:, :L], out[1]
+        return out[:, :L]
+    nc = L // chunk
+    rep = H // G
+
+    f32 = jnp.float32
+    xc = x.reshape(B, nc, chunk, H, P)
+    dtc = dt.reshape(B, nc, chunk, H).astype(f32)
+    Bc = Bm.reshape(B, nc, chunk, G, N)
+    Cc = Cm.reshape(B, nc, chunk, G, N)
+    BcH = jnp.repeat(Bc, rep, axis=3)                        # [B,nc,Q,H,N]
+    CcH = jnp.repeat(Cc, rep, axis=3)
+
+    dA = dtc * A.astype(f32)[None, None, None, :]            # [B,nc,Q,H] (<=0)
+    cum = jnp.cumsum(dA, axis=2)                             # within-chunk cumsum
+    seg_total = cum[:, :, -1, :]                             # [B,nc,H]
+
+    # --- intra-chunk (quadratic in chunk, matmul form) ----------------------
+    # L_mat[i,j] = exp(cum_i - cum_j) for i>=j else 0
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # [B,nc,Q,Q,H]
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    Lmat = jnp.where(causal, jnp.exp(diff), 0.0)             # f32
+    CB = jnp.einsum("bcihn,bcjhn->bcijh", CcH.astype(f32), BcH.astype(f32))
+    W = CB * Lmat * dtc[:, :, None, :, :]                    # [B,nc,Q,Q,H]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", W, xc.astype(f32))
+
+    # --- chunk states -------------------------------------------------------
+    decay_to_end = jnp.exp(seg_total[:, :, None, :] - cum)   # [B,nc,Q,H]
+    states = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn",
+                        (decay_to_end * dtc), BcH.astype(f32), xc.astype(f32))
+
+    # --- inter-chunk recurrence over nc -------------------------------------
+    if initial_state is None:
+        s0 = jnp.zeros((B, H, P, N), f32)
+    else:
+        s0 = initial_state.astype(f32)
+
+    def step(s, inp):
+        st, seg = inp                                        # [B,H,P,N], [B,H]
+        s_out = s                                            # state entering chunk
+        s = s * jnp.exp(seg)[:, :, None, None] + st
+        return s, s_out
+
+    sT, s_in = jax.lax.scan(step, s0,
+                            (jnp.moveaxis(states, 1, 0),
+                             jnp.moveaxis(seg_total, 1, 0)))
+    s_in = jnp.moveaxis(s_in, 0, 1)                          # [B,nc,H,P,N]
+
+    y_inter = jnp.einsum("bcqhn,bchpn->bcqhp",
+                         CcH.astype(f32) * jnp.exp(cum)[..., None], s_in)
+    y = (y_intra + y_inter).reshape(B, L, H, P).astype(x.dtype)
+    if return_state:
+        return y, sT
+    return y
+
+
+def ssd_reference(x, dt, A, Bm, Cm, initial_state=None):
+    """O(L) recurrent oracle (slow; tests only)."""
+    B, L, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    f32 = jnp.float32
+    s = jnp.zeros((B, H, P, N), f32) if initial_state is None else initial_state.astype(f32)
+    BmH = jnp.repeat(Bm, rep, axis=2).astype(f32)
+    CmH = jnp.repeat(Cm, rep, axis=2).astype(f32)
+
+    def step(s, inp):
+        xt, dtt, Bt, Ct = inp                                # [B,H,P],[B,H],[B,H,N]
+        decay = jnp.exp(dtt * A[None, :])                    # [B,H]
+        s = s * decay[:, :, None, None] + \
+            jnp.einsum("bh,bhn,bhp->bhpn", dtt, Bt, xt)
+        y = jnp.einsum("bhn,bhpn->bhp", Ct, s)
+        return s, y
+
+    sT, ys = jax.lax.scan(step, s,
+                          (jnp.moveaxis(x, 1, 0).astype(f32),
+                           jnp.moveaxis(dt, 1, 0).astype(f32),
+                           jnp.moveaxis(BmH, 1, 0),
+                           jnp.moveaxis(CmH, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), sT
+
+
+# ---------------------------------------------------------------------------
+# Full block
+# ---------------------------------------------------------------------------
+
+def _gated_norm(p, y, z, eps=1e-6):
+    y = y * jax.nn.silu(z)
+    dt = y.dtype
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return ((yf * jax.lax.rsqrt(var + eps)) *
+            (1.0 + p["norm"].astype(jnp.float32))).astype(dt)
+
+
+def mamba2_block(p, x, *, cfg: ModelConfig,
+                 cache: Optional[Dict[str, jnp.ndarray]] = None,
+                 decode: bool = False):
+    """x: [B,S,D] -> (out [B,S,D], new cache or None).
+
+    cache = {"conv": [B, K-1, ch], "ssm": [B, H, P, N]}
+    """
+    s = cfg.ssm
+    B, S, D = x.shape
+    di, nh = cfg.d_inner, cfg.ssm_heads
+    G, N, P_ = s.ngroups, s.state_dim, s.head_dim
+
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, xi, Bc, Cc, dt_raw = _split_proj(cfg, proj)
+    xBC = jnp.concatenate([xi, Bc, Cc], axis=-1)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))   # [B,S,nh]
+
+    if decode:
+        assert cache is not None and S == 1
+        xBC, conv_state = _causal_conv(xBC, p["conv_w"].astype(x.dtype),
+                                       p["conv_b"].astype(x.dtype),
+                                       state=cache["conv"])
+        xi, Bc, Cc = jnp.split(xBC, [di, di + G * N], axis=-1)
+        xh = xi.reshape(B, nh, P_)
+        Bh = jnp.repeat(Bc.reshape(B, G, N), nh // G, axis=1)
+        Ch = jnp.repeat(Cc.reshape(B, G, N), nh // G, axis=1)
+        dt1 = dt[:, 0, :]                                    # [B,nh]
+        decay = jnp.exp(dt1 * A[None, :])
+        ssm = cache["ssm"].astype(jnp.float32)
+        ssm = ssm * decay[:, :, None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dt1, Bh.astype(jnp.float32),
+            xh.astype(jnp.float32))
+        y = jnp.einsum("bhn,bhpn->bhp", Ch.astype(jnp.float32), ssm)
+        y = y + p["D"].astype(jnp.float32)[None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(B, 1, di).astype(x.dtype)
+        new_cache = {"conv": conv_state, "ssm": ssm}
+    else:
+        xBC, conv_tail = _causal_conv(xBC, p["conv_w"].astype(x.dtype),
+                                      p["conv_b"].astype(x.dtype))
+        xi, Bc, Cc = jnp.split(xBC, [di, di + G * N], axis=-1)
+        xh = xi.reshape(B, S, nh, P_)
+        xh = shard(xh, "batch", "seq", "act_ssm_heads", None)
+        Bh = Bc.reshape(B, S, G, N)
+        Ch = Cc.reshape(B, S, G, N)
+        want_state = cache is not None
+        out = ssd_chunked(xh, dt, A, Bh, Ch, chunk=min(s.chunk_size, S),
+                          return_state=want_state)
+        if want_state:
+            y4, ssm_state = out
+        else:
+            y4 = out
+        y4 = y4 + p["D"].astype(y4.dtype)[None, None, :, None] * xh
+        y = y4.reshape(B, S, di)
+        new_cache = None
+        if want_state:
+            new_cache = {"conv": conv_tail, "ssm": ssm_state}
+
+    y = _gated_norm(p, y, z)
+    return y @ p["out_proj"].astype(x.dtype), new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    ch = cfg.d_inner + 2 * s.ngroups * s.state_dim
+    return {
+        "conv": shard(jnp.zeros((batch, s.conv_dim - 1, ch), dtype),
+                      "batch", None, "act_ssm_inner"),
+        "ssm": shard(jnp.zeros((batch, cfg.ssm_heads, s.head_dim, s.state_dim),
+                               jnp.float32),
+                     "batch", "act_ssm_heads", None, None),
+    }

@@ -1,0 +1,358 @@
+"""Decoder-only transformer LM (llama4 / moonshot / qwen2 / gemma2 / qwen2-vl).
+
+Layers are stacked and scanned (``jax.lax.scan``) so HLO size is independent
+of depth; per-layer heterogeneity (gemma2 local/global alternation, hymba's
+three global layers) rides along as a traced flag vector in the scan xs.
+Activation remat policy wraps the scan body.  KV caches are stacked with a
+leading layer dim and scanned together with the parameters.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.configs.run import RunConfig
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (AttnRun, attention, def_attention, def_mlp,
+                                 def_rmsnorm, mlp, rmsnorm)
+from repro.models.params import PDef, stack_pdefs
+from repro.parallel.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# Layer patterns
+# ---------------------------------------------------------------------------
+
+def layer_flags(cfg: ModelConfig) -> np.ndarray:
+    """is_local flag per layer."""
+    L = cfg.num_layers
+    pat = cfg.attn.layer_pattern
+    if pat == "global" or cfg.attn.sliding_window is None:
+        return np.zeros(L, bool)
+    if pat == "local_global":               # gemma2: even layers local
+        return np.array([i % 2 == 0 for i in range(L)])
+    if pat == "hymba":                      # full attn at first/middle/last
+        glob = {0, L // 2, L - 1}
+        return np.array([i not in glob for i in range(L)])
+    raise ValueError(pat)
+
+
+def uses_uniform_global(cfg: ModelConfig) -> bool:
+    return not layer_flags(cfg).any()
+
+
+# ---------------------------------------------------------------------------
+# Parameter tree
+# ---------------------------------------------------------------------------
+
+def def_block(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    p: Dict[str, Any] = {"ln_attn": def_rmsnorm(d), "ln_mlp": def_rmsnorm(d)}
+    p["attn"] = def_attention(cfg)
+    if cfg.sandwich_norms:
+        p["ln_attn_post"] = def_rmsnorm(d)
+        p["ln_mlp_post"] = def_rmsnorm(d)
+    if cfg.moe is not None:
+        p["moe"] = moe_lib.def_moe(cfg)
+    else:
+        p["mlp"] = def_mlp(d, cfg.d_ff)
+    return p
+
+
+def def_lm(cfg: ModelConfig) -> Dict[str, Any]:
+    p: Dict[str, Any] = {
+        "embed": PDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                      init="normal"),
+        "layers": stack_pdefs(def_block(cfg), cfg.num_layers),
+        "ln_final": def_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = PDef((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                            init="scaled")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    hk, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": shard(jnp.zeros((batch, max_len, hk, hd), dtype),
+                   "batch", "cache_seq", None, "head_dim"),
+        "v": shard(jnp.zeros((batch, max_len, hk, hd), dtype),
+                   "batch", "cache_seq", None, "head_dim"),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def _stack_layers(per_layer, L: int):
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (L,) + x.shape), per_layer)
+
+
+def init_cache(cfg: ModelConfig, run: RunConfig, batch: int, max_len: int):
+    """Stacked (leading layer dim) cache pytree: {"attn": {k,v,pos}}."""
+    per_layer = init_attn_cache(cfg, batch, max_len, run.kvdtype)
+    return {"attn": _stack_layers(per_layer, cfg.num_layers)}
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _attn_run(run: RunConfig) -> AttnRun:
+    return AttnRun(impl=run.attn_impl, block_q=run.block_q,
+                   block_kv=run.block_kv,
+                   blocked_threshold=run.blocked_threshold,
+                   skip_blocks=run.skip_attn_blocks)
+
+
+def block_apply(pl, x, *, cfg: ModelConfig, run: RunConfig, positions,
+                local_flag, cache_layer=None, decode=False):
+    seq_ax = "seq_shard" if not decode else "seq"
+    h = rmsnorm(pl["ln_attn"], x, cfg.norm_eps)
+    # pin the norm output to the seq-sharded bf16 layout so the Megatron-SP
+    # all-gather happens on bf16 h at the qkv einsum, not on f32 internals
+    h = shard(h, "batch", seq_ax, "embed")
+    attn_out, new_cache = attention(
+        pl["attn"], h, cfg=cfg, positions=positions, is_local=local_flag,
+        run=_attn_run(run), cache=cache_layer, decode=decode)
+    if cfg.sandwich_norms:
+        attn_out = rmsnorm(pl["ln_attn_post"], attn_out, cfg.norm_eps)
+    x = x + attn_out
+    x = shard(x, "batch", "seq_shard" if not decode else "seq", "embed")
+
+    h = rmsnorm(pl["ln_mlp"], x, cfg.norm_eps)
+    h = shard(h, "batch", seq_ax, "embed")
+    if cfg.moe is not None:
+        mlp_out, aux = moe_lib.moe_block(pl["moe"], h, cfg=cfg)
+    else:
+        mlp_out, aux = mlp(pl["mlp"], h), {}
+    if cfg.sandwich_norms:
+        mlp_out = rmsnorm(pl["ln_mlp_post"], mlp_out, cfg.norm_eps)
+    x = x + mlp_out
+    x = shard(x, "batch", "seq_shard" if not decode else "seq", "embed")
+    return x, new_cache, aux
+
+
+def _remat_wrap(fn, run: RunConfig):
+    if run.remat == "none":
+        return fn
+    if run.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)            # "full": save nothing
+
+
+def embed_tokens(params, batch, cfg: ModelConfig, run: RunConfig):
+    if "embeds" in batch:                # vlm / audio frontend stubs
+        x = batch["embeds"].astype(run.cdtype)
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(run.cdtype)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), run.cdtype)
+    return x
+
+
+def layer_plan(cfg: ModelConfig):
+    """Static execution plan over the stacked layers.
+
+    Heterogeneous patterns are split into *uniform* groups so the locality
+    flag is a compile-time constant inside each group — static sliding
+    windows then take the banded attention path (O(S·band) instead of
+    O(S²); §Perf, hymba-1.5b/prefill_32k).  Groups:
+
+      ("scan",  start, count, flag)   — lax.scan over a contiguous slice
+      ("single", idx, flag)           — one unrolled layer
+      ("pair_scan", count)            — alternating local/global (gemma2):
+                                        scan over (even, odd) layer pairs
+    """
+    flags = layer_flags(cfg)
+    L = cfg.num_layers
+    if not flags.any():
+        return [("scan", 0, L, False)]
+    if cfg.attn.layer_pattern == "local_global" and L % 2 == 0:
+        return [("pair_scan", L // 2)]
+    plan = []
+    i = 0
+    while i < L:
+        j = i
+        while j < L and flags[j] == flags[i]:
+            j += 1
+        if j - i == 1:
+            plan.append(("single", i, bool(flags[i])))
+        else:
+            plan.append(("scan", i, j - i, bool(flags[i])))
+        i = j
+    return plan
+
+
+def forward_stack(params, batch, *, cfg: ModelConfig, run: RunConfig,
+                  block_fn, cache=None, decode=False):
+    """Generic grouped-scan driver shared by all decoder-only families.
+
+    ``block_fn(pl, x, positions, local_flag, cache_layer, decode)``
+        -> (x, new_cache_layer, aux)
+
+    The KV/SSM cache rides in the CARRY with per-layer dynamic slice/update,
+    not as scan xs/ys: emitting updated caches as ys allocates a second full
+    stacked cache (double-buffer), +5.4 GB/chip on qwen2-72b decode_32k
+    (§Perf log).  In-carry updates alias the donated buffer.
+    """
+    x = embed_tokens(params, batch, cfg, run)
+    B, S, D = x.shape
+    positions = batch.get("positions")
+    if positions is None:
+        if decode and cache is not None and "attn" in cache:
+            positions = cache["attn"]["pos"][0][:, None]       # [B,1]
+        elif decode:
+            positions = jnp.zeros((B, 1), jnp.int32)           # ssm: unused
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = shard(x, "batch", "seq_shard" if not decode else "seq", "embed")
+
+    layers = params["layers"]
+    aux_acc: Dict[str, Any] = {}
+
+    def add_aux(aux):
+        for k, v in aux.items():
+            v = jnp.sum(v)
+            aux_acc[k] = aux_acc.get(k, 0.0) + v
+
+    def body(xx, pl, flag, cl):
+        return block_fn(pl, xx, positions=positions, local_flag=flag,
+                        cache_layer=cl, decode=decode)
+
+    def slice_layers(start, count, stride=1):
+        if stride == 1:
+            return jax.tree.map(lambda p: p[start:start + count], layers)
+        return jax.tree.map(lambda p: p[start::stride][:count], layers)
+
+    def cache_at(full_cache, idx):
+        return jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, idx, 0,
+                                                   keepdims=False),
+            full_cache)
+
+    def cache_set(full_cache, nc, idx):
+        return jax.tree.map(
+            lambda c, n: jax.lax.dynamic_update_index_in_dim(
+                c, n.astype(c.dtype), idx, 0), full_cache, nc)
+
+    new_cache = cache
+
+    def run_single(x, new_cache, li, flag):
+        pl = jax.tree.map(lambda p: p[li], layers)
+        cl = cache_at(new_cache, li) if new_cache is not None else None
+        y, nc, aux = _remat_wrap(
+            lambda c, p_, cl_: body(c, p_, flag, cl_), run)(x, pl, cl)
+        add_aux(aux)
+        if new_cache is not None and nc is not None:
+            new_cache = cache_set(new_cache, nc, li)
+        return y, new_cache
+
+    def run_scan(x, new_cache, start, count, flag, pair=False):
+        if pair:
+            xs = (slice_layers(0, count, stride=2),
+                  slice_layers(1, count, stride=2))
+        else:
+            xs = (slice_layers(start, count),)
+
+        if new_cache is None:
+            def scan_fn(carry, pls):
+                y = carry
+                if pair:
+                    y, aux1 = _remat_wrap(
+                        lambda c, p_: _drop_cache(body(c, p_, True, None)),
+                        run)(y, pls[0])
+                    y, aux2 = _remat_wrap(
+                        lambda c, p_: _drop_cache(body(c, p_, False, None)),
+                        run)(y, pls[1])
+                    return y, {**aux1, **{k + "_g": v
+                                          for k, v in aux2.items()}}
+                y, aux = _remat_wrap(
+                    lambda c, p_: _drop_cache(body(c, p_, flag, None)),
+                    run)(y, pls[0])
+                return y, aux
+            x, auxs = jax.lax.scan(scan_fn, x, xs)
+            add_aux(auxs)
+            return x, None
+        else:
+            def scan_fn(carry, pls):
+                y, fc, idx = carry
+                if pair:
+                    for sub, (p_, fl) in enumerate(
+                            zip(pls, (True, False))):
+                        li = idx * 2 + sub
+                        cl = cache_at(fc, li)
+                        y, nc, aux = _remat_wrap(
+                            lambda c, pp, cc, f=fl: body(c, pp, f, cc),
+                            run)(y, p_, cl)
+                        fc = cache_set(fc, nc, li)
+                    return (y, fc, idx + 1), aux
+                li = start + idx
+                cl = cache_at(fc, li)
+                y, nc, aux = _remat_wrap(
+                    lambda c, pp, cc: body(c, pp, flag, cc), run)(y, pls[0],
+                                                                  cl)
+                fc = cache_set(fc, nc, li)
+                return (y, fc, idx + 1), aux
+            (x, fc, _), auxs = jax.lax.scan(
+                scan_fn, (x, new_cache, jnp.int32(0)), xs)
+            add_aux(auxs)
+            return x, fc
+
+    for group in layer_plan(cfg):
+        if group[0] == "single":
+            _, li, flag = group
+            x, new_cache = run_single(x, new_cache, li, flag)
+        elif group[0] == "pair_scan":
+            _, count = group
+            x, new_cache = run_scan(x, new_cache, 0, count, None, pair=True)
+        else:
+            _, start, count, flag = group
+            x, new_cache = run_scan(x, new_cache, start, count, flag)
+
+    aux = dict(aux_acc)
+    x = rmsnorm(params["ln_final"], x, cfg.norm_eps)
+    return x, new_cache, aux
+
+
+def _drop_cache(t3):
+    y, _, aux = t3
+    return y, aux
+
+
+def make_dense_block(cfg: ModelConfig, run: RunConfig):
+    def block(pl, x, *, positions, local_flag, cache_layer, decode):
+        cl = cache_layer["attn"] if cache_layer is not None else None
+        y, nc, aux = block_apply(pl, x, cfg=cfg, run=run, positions=positions,
+                                 local_flag=local_flag, cache_layer=cl,
+                                 decode=decode)
+        return y, ({"attn": nc} if nc is not None else None), aux
+    return block
+
+
+def forward_lm(params, batch, *, cfg: ModelConfig, run: RunConfig,
+               cache=None, decode=False):
+    """Dense/MoE/VLM decoder-only forward: (hidden, new_cache, aux)."""
+    return forward_stack(params, batch, cfg=cfg, run=run,
+                         block_fn=make_dense_block(cfg, run),
+                         cache=cache, decode=decode)
+
+
+def lm_logits(params, hidden, cfg: ModelConfig, run: RunConfig):
+    """[.., D] -> [.., V] with optional final softcap (gemma2)."""
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = hidden @ w.astype(hidden.dtype)
+    if cfg.attn.final_softcap is not None:
+        c = cfg.attn.final_softcap
+        logits = c * jnp.tanh(logits.astype(jnp.float32) / c)
+    return logits

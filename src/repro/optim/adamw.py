@@ -1,0 +1,123 @@
+"""AdamW with cosine schedule, global-norm clipping, and ZeRO-1 sharding.
+
+The optimizer state (mu, nu) can be sharded over the 'data' mesh axis in
+addition to the parameter's own TP sharding (``zero1_specs``): GSPMD then
+materializes the classic ZeRO-1 reduce-scatter(grads) -> local update ->
+all-gather(params) schedule.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_at(cfg: OptConfig, step):
+    """Linear warmup then cosine decay (f32 scalar)."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = cfg.lr * jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    t = jnp.clip((step - cfg.warmup_steps) /
+                 max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(np.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    zeros = lambda t: jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), t)
+    return {"mu": zeros(params), "nu": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def adamw_update(grads, opt_state, params, cfg: OptConfig):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"]
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    lr = lr_at(cfg, step)
+
+    mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                      opt_state["mu"], grads)
+    nu = jax.tree.map(lambda n, g: cfg.b2 * n + (1 - cfg.b2) * jnp.square(g),
+                      opt_state["nu"], grads)
+    c1 = 1 - cfg.b1 ** (step.astype(jnp.float32) + 1)
+    c2 = 1 - cfg.b2 ** (step.astype(jnp.float32) + 1)
+
+    def upd(p, m, n):
+        mhat = m / c1
+        nhat = n / c2
+        step_ = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        if cfg.weight_decay:
+            step_ = step_ + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    new_state = {"mu": mu, "nu": nu, "step": step + 1}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1 sharding of optimizer state
+# ---------------------------------------------------------------------------
+
+def zero1_specs(param_specs, abstract_params, mesh, rules):
+    """Add the 'opt_shard' ('data') axis to the first divisible unsharded dim.
+
+    ``param_specs``: PartitionSpec tree; ``abstract_params``: matching tree of
+    ShapeDtypeStructs.  Leaves where no dim divides keep the param spec
+    (ZeRO-1 falls back gracefully for small tensors).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    data_axes = rules.resolve("opt_shard")
+    if data_axes is None or mesh is None:
+        return param_specs
+    if isinstance(data_axes, str):
+        data_axes = (data_axes,)
+    dsize = 1
+    for a in data_axes:
+        dsize *= mesh.shape[a]
+
+    def one(spec, aval):
+        shape = aval.shape
+        parts = list(tuple(spec)) + [None] * (len(shape) - len(tuple(spec)))
+        flat = set()
+        for e in parts:
+            flat.update((e,) if isinstance(e, str) else (e or ()))
+        if flat & set(data_axes):
+            return spec              # FSDP already shards this leaf over data
+        for i, (s, ax) in enumerate(zip(shape, parts)):
+            if ax is None and s % dsize == 0 and s >= dsize:
+                parts[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+                return P(*parts)
+        return spec
+
+    return jax.tree.map(one, param_specs, abstract_params)

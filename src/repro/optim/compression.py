@@ -1,0 +1,66 @@
+"""Error-feedback int8 gradient compression.
+
+For cross-pod data parallelism the gradient all-reduce is the dominant
+DCI/ICI payload; quantizing to int8 with per-tensor scale cuts it 4× vs f32
+(2× vs bf16).  Plain quantization biases training; error feedback (EF-SGD /
+1-bit-Adam style) keeps the quantization residual in optimizer state and
+adds it back next step, making compression unbiased in the long run —
+``tests/test_train_loop.py`` shows convergence parity on the synthetic LM.
+
+``apply`` operates on the *already-reduced* gradient tree in the pjit path
+(the compression itself is what a bandwidth-limited deployment would move
+into a shard_map collective; ``wire_bytes_saved`` reports the would-be
+saving and the dry-run's compressed variant measures it for §Perf).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-20) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+@dataclass(frozen=True)
+class Int8ErrorFeedback:
+    """Gradient compressor with persistent error state under key 'ef_error'."""
+
+    def init_error(self, params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def apply(self, grads, state) -> Tuple[Any, Any, Dict]:
+        err = state["ef_error"]
+
+        def one(g, e):
+            g32 = g.astype(jnp.float32) + e
+            q, scale = quantize_int8(g32)
+            deq = dequantize_int8(q, scale)
+            return deq, g32 - deq
+
+        flat = jax.tree.map(one, grads, err)
+        new_grads = jax.tree.map(lambda t: t[0], flat,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+        new_err = jax.tree.map(lambda t: t[1], flat,
+                               is_leaf=lambda t: isinstance(t, tuple))
+        new_state = dict(state)
+        new_state["ef_error"] = new_err
+        err_norm = jnp.sqrt(sum(jnp.sum(jnp.square(e))
+                                for e in jax.tree.leaves(new_err)))
+        return new_grads, new_state, {"ef_error_norm": err_norm}
+
+    @staticmethod
+    def wire_bytes_saved(params) -> float:
+        """f32 all-reduce payload minus int8+scale payload, per step."""
+        total = sum(x.size for x in jax.tree.leaves(params))
+        n = len(jax.tree.leaves(params))
+        return 4.0 * total - (1.0 * total + 4.0 * n)

@@ -1,0 +1,254 @@
+"""Logical-axis sharding rules and activation constraints.
+
+Model code names axes logically (``shard(x, "batch", "seq_shard", None)``);
+rules bound to the active mesh resolve logical names to mesh axes.  Outside a
+sharding context (single-device CPU tests) everything is a no-op, so the same
+model code runs everywhere.
+
+Rule sets implement the distribution design of DESIGN.md §5:
+  * TP  : heads / ff / vocab / experts  -> 'model'
+  * DP  : batch                         -> ('pod', 'data')   (pod folded into DP)
+  * SP  : residual-stream seq           -> 'model' (Megatron sequence parallelism)
+  * EP  : expert dim                    -> 'model'
+  * decode: KV-cache length             -> 'model' (avoids kv-head padding; see DESIGN)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+TRAIN_RULES: Dict[str, AxisVal] = {
+    # weights
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "ssm_inner": "model",
+    "layers": None,
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_shard": "model",       # sequence-parallel residual stream
+    "act_heads": "model",
+    "act_kv_heads": "model",
+    "act_ff": "model",
+    "act_experts": "model",
+    "act_ssm_heads": "model",
+    "act_ssm_inner": "model",
+    "expert_cap": None,
+    "cache_seq": "model",       # decode KV cache shards length, not kv-heads
+    # misc
+    "stage": "pod",             # pipeline-parallel stage placement (optional path)
+    "opt_shard": ("pod", "data"),  # ZeRO-1 optimizer-state sharding axes
+    "fsdp": ("pod", "data"),    # ZeRO-3 secondary weight sharding axes
+}
+
+# Prefill: like training (seq-parallel residual), cache written length-sharded.
+PREFILL_RULES = dict(TRAIN_RULES)
+
+# Decode: length-1 activations replicate head/seq axes; weights stay TP-sharded;
+# the model axis works on KV-cache length shards instead.
+DECODE_RULES = dict(TRAIN_RULES)
+DECODE_RULES.update({
+    "seq_shard": None,
+    "act_heads": None,
+    "act_kv_heads": None,
+    # Serving weights stay 2D-sharded (model × data).  A 72B/108B bf16
+    # checkpoint at TP=16 alone is 13.5 GB/chip — over budget with the KV
+    # cache — so the data axis must carry weight shards too; GSPMD either
+    # moves activations (2D weight-stationary TP) or gathers one layer at a
+    # time inside the scan.  The roofline table prices the resulting
+    # collective term; see EXPERIMENTS.md §Perf for the latency trade-off.
+    "fsdp": "data",
+})
+
+# Pure-FSDP (ZeRO-3) training layout: no tensor parallelism — batch shards
+# over every axis, weights/optimizer shard over every axis, per-layer weight
+# all-gathers replace the Megatron activation collectives.  Wins when
+# tokens-per-chip is small relative to weights (qwen2-72b/train_4k: 4.1x
+# less wire than TP+SP; EXPERIMENTS.md §Perf).
+FSDP_RULES: Dict[str, AxisVal] = {k: None for k in TRAIN_RULES}
+FSDP_RULES.update({
+    "batch": ("data", "model"),
+    "stage": "pod",
+    "opt_shard": ("pod", "data", "model"),
+    "fsdp": ("pod", "data", "model"),
+})
+
+# long_500k (global_batch=1): nothing to data-shard, so context-parallelize the
+# KV cache over BOTH data and model axes (2048 positions/chip at 512k×256).
+LONG_DECODE_RULES = dict(DECODE_RULES)
+LONG_DECODE_RULES.update({
+    "batch": None,
+    "cache_seq": ("data", "model"),
+})
+
+
+@dataclass(frozen=True)
+class Rules:
+    table: Dict[str, AxisVal]
+    mesh_axes: Tuple[str, ...]
+    mesh_shape: Dict[str, int] = field(default_factory=dict)
+
+    def resolve(self, logical: Optional[str]) -> AxisVal:
+        if logical is None:
+            return None
+        if logical not in self.table:
+            raise KeyError(f"unknown logical axis {logical!r}")
+        v = self.table[logical]
+        if v is None:
+            return None
+        if isinstance(v, str):
+            return v if v in self.mesh_axes else None
+        kept = tuple(a for a in v if a in self.mesh_axes)
+        return kept if kept else None
+
+    def axis_size(self, v: AxisVal) -> int:
+        if v is None:
+            return 1
+        if isinstance(v, str):
+            v = (v,)
+        n = 1
+        for a in v:
+            n *= self.mesh_shape.get(a, 1)
+        return n
+
+    def pspec(self, *axes: Optional[str]) -> P:
+        return P(*[self.resolve(a) for a in axes])
+
+    def pspec_checked(self, shape: Tuple[int, ...],
+                      axes: Tuple[Optional[str], ...],
+                      tp_fallback: bool = False) -> P:
+        """Resolve axes, dropping assignments that do not divide the dim.
+
+        ``tp_fallback`` (weights only):
+          (a) if nothing landed on 'model' and the tensor is large, place
+              'model' on the largest divisible free dim — row-parallel
+              fallback for head counts that don't divide TP (llama4: 40
+              heads on model=16 -> shard d_model instead);
+          (b) FSDP/ZeRO-3: additionally shard large weights over the 'fsdp'
+              axes ('data') so parameter + optimizer memory scales with the
+              full chip count; GSPMD materializes the per-layer all-gather
+              inside the layer scan.
+        """
+        parts = []
+        used = set()
+        for dim, ax in zip(shape, axes):
+            r = self.resolve(ax)
+            names = (r,) if isinstance(r, str) else (r or ())
+            if r is not None and dim % self.axis_size(r) == 0 and \
+                    not (set(names) & used):
+                parts.append(r)
+                used.update(names)
+            else:
+                parts.append(None)
+        numel = 1
+        for d in shape:
+            numel *= d
+        tp_mode = self.table.get("heads") is not None
+        if tp_fallback and tp_mode and "model" in self.mesh_shape and \
+                "model" not in used and numel >= (1 << 20):
+            cands = [(d, i) for i, (d, pspec_e) in
+                     enumerate(zip(shape, parts)) if pspec_e is None and
+                     d % self.mesh_shape["model"] == 0 and d > 1]
+            if cands:
+                _, i = max(cands)
+                parts[i] = "model"
+                used.add("model")
+        fsdp = self.resolve("fsdp") if tp_fallback and \
+            "fsdp" in self.table else None
+        if fsdp is not None and numel >= (1 << 21):
+            fnames = set((fsdp,) if isinstance(fsdp, str) else fsdp)
+            if not (fnames & used):
+                n = self.axis_size(fsdp)
+                cands = [(d, i) for i, (d, pspec_e) in
+                         enumerate(zip(shape, parts))
+                         if pspec_e is None and d % n == 0 and d >= n]
+                if cands:
+                    _, i = max(cands)
+                    parts[i] = fsdp
+        return P(*parts)
+
+
+@dataclass
+class ShardingCtx:
+    mesh: Mesh
+    rules: Rules
+
+
+_STATE = threading.local()
+
+
+def current_ctx() -> Optional[ShardingCtx]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Optional[Mesh], table: Dict[str, AxisVal]):
+    prev = current_ctx()
+    if mesh is None:
+        _STATE.ctx = None
+    else:
+        _STATE.ctx = ShardingCtx(mesh, _bind(mesh, table))
+    try:
+        yield _STATE.ctx
+    finally:
+        _STATE.ctx = prev
+
+
+def _bind(mesh: Mesh, table: Dict[str, AxisVal]) -> Rules:
+    shape = {n: int(s) for n, s in zip(mesh.axis_names, mesh.devices.shape)}
+    return Rules(table, tuple(mesh.axis_names), shape)
+
+
+def make_rules(mesh: Optional[Mesh], table: Dict[str, AxisVal]) -> Optional[Rules]:
+    if mesh is None:
+        return None
+    return _bind(mesh, table)
+
+
+def shard(x, *axes: Optional[str]):
+    """Constrain activation ``x`` to logical axes (no-op w/o a sharding ctx)."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    if x.ndim != len(axes):
+        raise ValueError(f"rank mismatch: {x.shape} vs axes {axes}")
+    spec = ctx.rules.pspec_checked(tuple(x.shape), axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def named_sharding(*axes: Optional[str]) -> Optional[NamedSharding]:
+    ctx = current_ctx()
+    if ctx is None:
+        return None
+    return NamedSharding(ctx.mesh, ctx.rules.pspec(*axes))
+
+
+def batch_axis_size(mesh: Optional[Mesh], table=TRAIN_RULES) -> int:
+    """Total data-parallel degree of the mesh (pod × data)."""
+    if mesh is None:
+        return 1
+    rules = _bind(mesh, table)
+    v = rules.resolve("batch")
+    if v is None:
+        return 1
+    if isinstance(v, str):
+        v = (v,)
+    n = 1
+    for a in v:
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,76 @@
+"""End-to-end training loop: data -> supervised step -> checkpoints, with the
+Synapse runtime watchers around it (profile-as-you-train) and the predictor
+feeding the straggler deadline.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.configs.run import RunConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.model_zoo import Model, build_model
+from repro.optim.adamw import OptConfig
+from repro.optim.compression import Int8ErrorFeedback
+from repro.runtime.supervisor import (FailurePlan, Supervisor,
+                                      SupervisorConfig)
+from repro.train.step import init_train_state, make_train_step
+
+
+@dataclass
+class TrainJob:
+    model: Model
+    data: SyntheticLM
+    step_fn: Any
+    ckpt: CheckpointManager
+    supervisor: Supervisor
+
+
+def make_job(cfg: ModelConfig, run: RunConfig, *, opt: OptConfig = OptConfig(),
+             data_cfg: Optional[DataConfig] = None, ckpt_dir: str = "/tmp/ckpt",
+             mesh=None, sup_cfg: Optional[SupervisorConfig] = None,
+             compress: bool = False) -> TrainJob:
+    model = build_model(cfg, run)
+    data = SyntheticLM(data_cfg or DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=512, global_batch=8))
+    compressor = Int8ErrorFeedback() if compress else None
+    step = jax.jit(make_train_step(model, opt, mesh, compress=compressor),
+                   donate_argnums=0)
+    ckpt = CheckpointManager(ckpt_dir, keep=(sup_cfg or SupervisorConfig()).keep)
+    sup = Supervisor(ckpt, sup_cfg or SupervisorConfig())
+    return TrainJob(model=model, data=data, step_fn=step, ckpt=ckpt,
+                    supervisor=sup)
+
+
+def train(job: TrainJob, num_steps: int, *, rng_seed: int = 0,
+          resume: bool = True, failure_plan: Optional[FailurePlan] = None,
+          compress: bool = False) -> Dict:
+    start = 0
+    compressor = Int8ErrorFeedback() if compress else None
+    if resume and job.ckpt.latest_step() is not None:
+        state, extra = job.ckpt.restore()
+        start = extra.get("step", job.ckpt.latest_step())
+    else:
+        state = init_train_state(job.model, jax.random.key(rng_seed),
+                                 compress=compressor)
+
+    losses = []
+
+    def step_fn(state, batch):
+        state, metrics = job.step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+        return state, metrics
+
+    state, metrics = job.supervisor.run(
+        state=state, step_fn=step_fn,
+        batch_fn=lambda s: job.data.batch_at(s),
+        num_steps=num_steps, start_step=start, failure_plan=failure_plan,
+        extra_fn=lambda s: {"data": job.data.state(s)})
+    return {"state": state, "losses": losses,
+            "final_metrics": {k: float(v) for k, v in metrics.items()},
+            "report": job.supervisor.report}

@@ -1,0 +1,44 @@
+"""Cross-entropy loss, optionally chunked over the sequence so the full
+[B, S, V] logits tensor is never materialized (vocab up to 256k here — at
+train_4k/llama4 that tensor would be 400 GB global).  The chunk loop is a
+``lax.scan`` whose body recomputes under the remat policy in backward.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _ce_block(logits, targets):
+    """logits [.., V] f32; targets [..] int32 -> (sum loss, sum correct)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(lse - tgt)
+    correct = jnp.sum((jnp.argmax(logits, -1) == targets).astype(jnp.float32))
+    return loss, correct
+
+
+def cross_entropy(logits_fn, hidden, targets,
+                  chunk: int = 0) -> Tuple[jnp.ndarray, Dict]:
+    """logits_fn(hidden_chunk) -> logits_chunk.  Returns (mean loss, metrics)."""
+    B, S = targets.shape
+    n_tok = B * S
+    if chunk <= 0 or S <= chunk or S % chunk != 0:
+        loss, correct = _ce_block(logits_fn(hidden), targets)
+    else:
+        nc = S // chunk
+        h = jnp.moveaxis(hidden.reshape(B, nc, chunk, -1), 1, 0)
+        t = jnp.moveaxis(targets.reshape(B, nc, chunk), 1, 0)
+
+        def body(carry, xs):
+            hl, tl = xs
+            l, c = _ce_block(logits_fn(hl), tl)
+            return (carry[0] + l, carry[1] + c), None
+
+        (loss, correct), _ = jax.lax.scan(
+            jax.checkpoint(body), (jnp.zeros(()), jnp.zeros(())), (h, t))
+    return loss / n_tok, {"accuracy": correct / n_tok,
+                          "tokens": jnp.asarray(n_tok, jnp.float32)}

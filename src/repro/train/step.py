@@ -1,0 +1,167 @@
+"""Train step factory: forward + chunked CE + AdamW, with microbatched
+gradient accumulation and mesh-aware sharding entered at trace time.
+
+The returned step is a pure function  (state, batch) -> (state, metrics)
+suitable for ``jax.jit`` with explicit in/out shardings from
+``train_state_specs``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model_zoo import Model
+from repro.optim.adamw import (OptConfig, adamw_update, init_opt_state,
+                               zero1_specs)
+from repro.parallel.sharding import (TRAIN_RULES, Rules, make_rules, shard,
+                                     use_sharding)
+from repro.train.loss import cross_entropy
+
+AUX_LOSS_KEYS = ("moe_load_balance", "moe_router_z")
+
+
+def make_loss_fn(model: Model):
+    from repro.models.params import cast_tree
+
+    def loss_fn(params, batch):
+        # Mixed precision: f32 master params cast to bf16 ONCE, before the
+        # layer scan — FSDP all-gathers then move bf16 (half the wire bytes)
+        # and no f32 weight copies are ever materialized.  Grads flow back
+        # through the cast and accumulate into f32 master state.
+        params_c = cast_tree(params, model.run.cdtype)
+        hidden, _, aux = model.forward(params_c, batch)
+        targets = batch["targets"]
+        ce, metrics = cross_entropy(
+            lambda h: model.logits(params_c, h), hidden, targets,
+            model.run.loss_chunk)
+        loss = ce
+        for k in AUX_LOSS_KEYS:
+            if k in aux:
+                loss = loss + aux[k]
+        metrics.update(aux)
+        metrics["ce_loss"] = ce
+        return loss, metrics
+    return loss_fn
+
+
+def _split_microbatches(batch, m: int):
+    def resh(x):
+        # batch dim may be axis 0 ([B,...]) or axis 1 ([3,B,S] M-RoPE positions)
+        if x.ndim >= 2 and x.shape[0] == 3 and x.shape[1] % m == 0:
+            return jnp.moveaxis(
+                x.reshape(x.shape[0], m, x.shape[1] // m, *x.shape[2:]), 1, 0)
+        assert x.shape[0] % m == 0, (x.shape, m)
+        return x.reshape(m, x.shape[0] // m, *x.shape[1:])
+    return jax.tree.map(resh, batch)
+
+
+def make_train_step(model: Model, opt_cfg: OptConfig, mesh=None,
+                    rules_table=TRAIN_RULES, compress=None):
+    """``compress``: optional gradient compressor (repro.optim.compression)."""
+    loss_fn = make_loss_fn(model)
+    m = model.run.microbatches
+
+    def train_step(state, batch):
+        with use_sharding(mesh, rules_table):
+            params = state["params"]
+            if m <= 1:
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+            else:
+                mb = _split_microbatches(batch, m)
+
+                def acc_body(carry, mbatch):
+                    gsum, lsum = carry
+                    (l, met), g = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, mbatch)
+                    gsum = jax.tree.map(
+                        lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                    return (gsum, lsum + l), met
+
+                g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  params)
+                (grads, loss), mets = jax.lax.scan(
+                    acc_body, (g0, jnp.zeros(())), mb)
+                grads = jax.tree.map(lambda g: g / m, grads)
+                loss = loss / m
+                metrics = jax.tree.map(lambda x: jnp.mean(x, 0), mets)
+
+            if compress is not None:
+                grads, state, cmetrics = compress.apply(grads, state)
+                metrics.update(cmetrics)
+
+            new_params, new_opt, opt_metrics = adamw_update(
+                grads, state["opt"], params, opt_cfg)
+            metrics.update(opt_metrics)
+            metrics["loss"] = loss
+            new_state = dict(state)
+            new_state["params"] = new_params
+            new_state["opt"] = new_opt
+            return new_state, metrics
+
+    return train_step
+
+
+def init_train_state(model: Model, rng, compress=None) -> Dict[str, Any]:
+    params = model.init(rng)
+    state = {"params": params, "opt": init_opt_state(params)}
+    if compress is not None:
+        state["ef_error"] = compress.init_error(params)
+    return state
+
+
+def train_state_specs(model: Model, mesh, rules: Rules, compress=None):
+    """PartitionSpec tree for the train state (params TP, opt ZeRO-1)."""
+    from jax.sharding import PartitionSpec as P
+    pspecs = model.param_specs(rules)
+    abstract = model.abstract()
+    if model.run.zero1:
+        ospecs = zero1_specs(pspecs, abstract, mesh, rules)
+    else:
+        ospecs = pspecs
+    state = {"params": pspecs,
+             "opt": {"mu": ospecs, "nu": ospecs, "step": P()}}
+    if compress is not None:
+        state["ef_error"] = ospecs
+    return state
+
+
+def abstract_train_state(model: Model, mesh=None, rules=None, compress=None):
+    """ShapeDtypeStruct tree with shardings — dry-run input, no allocation."""
+    from jax.sharding import NamedSharding
+
+    abstract = model.abstract()
+    if mesh is None:
+        from jax.sharding import PartitionSpec as P
+        specs = {"params": jax.tree.map(lambda _: P(), abstract),
+                 "opt": {"mu": jax.tree.map(lambda _: P(), abstract),
+                         "nu": jax.tree.map(lambda _: P(), abstract),
+                         "step": P()}}
+        if compress is not None:
+            specs["ef_error"] = jax.tree.map(lambda _: P(), abstract)
+    else:
+        specs = train_state_specs(model, mesh, rules, compress)
+
+    def mk(aval, spec, dtype=None):
+        dt = dtype or aval.dtype
+        if mesh is None:
+            return jax.ShapeDtypeStruct(aval.shape, dt)
+        return jax.ShapeDtypeStruct(aval.shape, dt,
+                                    sharding=NamedSharding(mesh, spec))
+
+    params = jax.tree.map(mk, abstract, specs["params"])
+    f32 = functools.partial(mk, dtype=jnp.float32)
+    mu = jax.tree.map(f32, abstract, specs["opt"]["mu"])
+    nu = jax.tree.map(f32, abstract, specs["opt"]["nu"])
+    step = jax.ShapeDtypeStruct((), jnp.int32) if mesh is None else \
+        jax.ShapeDtypeStruct((), jnp.int32,
+                             sharding=NamedSharding(
+                                 mesh, specs["opt"]["step"]))
+    state = {"params": params, "opt": {"mu": mu, "nu": nu, "step": step}}
+    if compress is not None:
+        state["ef_error"] = jax.tree.map(f32, abstract, specs["ef_error"])
+    return state

@@ -1,0 +1,82 @@
+"""Per-arch smoke tests: reduced config of the same family, one forward and
+one prefill+decode on CPU, asserting output shapes and no NaNs (assignment
+requirement f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config, list_archs, reduced_config
+from repro.configs.run import RunConfig
+from repro.models import frontends
+from repro.models.model_zoo import build_model
+
+RUN = RunConfig(param_dtype="float32", compute_dtype="float32",
+                cache_dtype="float32", remat="none", loss_chunk=0,
+                blocked_threshold=8192)
+
+B, S = 2, 16
+
+
+def make_batch(cfg, rng, batch=B, seq=S):
+    if cfg.family == "encdec":
+        return {
+            "src_embeds": frontends.audio_frame_embeddings(
+                rng, batch, seq // 2, cfg.d_model),
+            "tgt_tokens": jax.random.randint(rng, (batch, seq // 2), 0,
+                                             cfg.vocab_size),
+        }
+    if cfg.frontend == "vision_patches":
+        return {
+            "embeds": frontends.vision_patch_embeddings(rng, batch, seq,
+                                                        cfg.d_model),
+            "positions": frontends.mrope_positions(batch, seq, grid=(2, 2, 2)),
+        }
+    return {"tokens": jax.random.randint(rng, (batch, seq), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_forward_smoke(arch):
+    cfg = reduced_config(get_config(arch))
+    model = build_model(cfg, RUN)
+    params = model.init(jax.random.key(0))
+    batch = make_batch(cfg, jax.random.key(1))
+    hidden, cache, aux = jax.jit(
+        lambda p, b: model.forward(p, b))(params, batch)
+    seq = S // 2 if cfg.family == "encdec" else S
+    assert hidden.shape == (B, seq, cfg.d_model)
+    assert cache is None
+    assert np.isfinite(np.asarray(hidden)).all(), f"{arch}: non-finite hidden"
+    logits = model.logits(params, hidden)
+    assert logits.shape == (B, seq, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all(), f"{arch}: non-finite logits"
+    for k, v in aux.items():
+        assert np.isfinite(float(v)), (arch, k)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_prefill_decode_smoke(arch):
+    cfg = reduced_config(get_config(arch))
+    model = build_model(cfg, RUN)
+    params = model.init(jax.random.key(0))
+    batch = make_batch(cfg, jax.random.key(1))
+    seq = S // 2 if cfg.family == "encdec" else S
+    max_len = seq + 4
+    cache = model.init_cache(B, max_len, src_len=seq // 1 if cfg.family ==
+                             "encdec" else None) \
+        if cfg.family == "encdec" else model.init_cache(B, max_len)
+
+    hidden, cache, _ = jax.jit(
+        lambda p, b, c: model.forward(p, b, cache=c))(params, batch, cache)
+    assert cache is not None
+    assert np.isfinite(np.asarray(hidden)).all()
+
+    tok = jnp.zeros((B, 1), jnp.int32)
+    step = jax.jit(lambda p, t, c: model.forward(p, {"tokens": t}, cache=c,
+                                                 decode=True))
+    for _ in range(3):
+        hidden, cache, _ = step(params, tok, cache)
+        assert hidden.shape == (B, 1, cfg.d_model)
+        assert np.isfinite(np.asarray(hidden)).all(), f"{arch}: decode NaN"
+        logits = model.logits(params, hidden)
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)

@@ -1,0 +1,74 @@
+"""End-to-end behaviour of the paper's system: the full
+profile -> store -> emulate -> predict pipeline on a real workload, and one
+real dry-run cell (subprocess: the dry-run needs its own device count)."""
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_profile_store_emulate_predict_pipeline(tmp_path):
+    """The paper's whole lifecycle on a real (tiny) LM training run."""
+    sys.path.insert(0, ROOT)
+    from benchmarks.common import tiny_train_workload
+    from benchmarks.bench_profiling_consistency import (_abstract_batch,
+                                                        _abstract_state)
+    from repro.core import (Emulator, ProfileStore, RuntimeProfiler, TPU_V5E,
+                            calibrate, predict, profile_compiled)
+
+    run_fn, meta = tiny_train_workload(steps=2)
+
+    # profile (both watcher families)
+    rprof = RuntimeProfiler(sample_rate=20).profile_callable(
+        run_fn, command="sys-lm", tags={"steps": "2"},
+        flops_per_cpu_s=calibrate().flops_per_s)
+    compiled = meta["step"].lower(_abstract_state(meta["model"]),
+                                  _abstract_batch(meta)).compile()
+    sprof = profile_compiled(compiled, command="sys-lm", tags={"k": "static"})
+    assert sprof.totals.flops > 1e8
+    assert len(sprof.samples) > 3          # phase-sampled, ordered
+    assert [s.index for s in sprof.samples] == list(
+        range(len(sprof.samples)))
+
+    # store + statistics over repeats
+    store = ProfileStore(str(tmp_path))
+    store.add(sprof)
+    store.add(sprof)
+    stats = store.stats("sys-lm", {"k": "static"})
+    assert stats.n == 2 and stats.std["flops"] == 0.0
+
+    # emulate anywhere (here) — consumption totals preserved
+    rep = Emulator().emulate(store.latest("sys-lm", {"k": "static"}))
+    assert rep.consumed.flops == pytest.approx(sprof.totals.flops, rel=1e-6)
+    assert rep.ttc_s > 0
+
+    # predict on hardware we don't have
+    pred = predict(sprof, TPU_V5E)
+    assert 0 < pred.ttc_max <= pred.ttc_sum
+    assert pred.terms.dominant in ("compute", "memory", "collective")
+
+
+@pytest.mark.slow
+@pytest.mark.subproc
+def test_dryrun_cell_end_to_end(tmp_path):
+    """One real (arch × shape × mesh) cell through the production dry-run."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen2-1.5b",
+         "--shape", "decode_32k", "--out", str(tmp_path)],
+        capture_output=True, text=True, env=env, timeout=560, cwd=ROOT)
+    assert out.returncode == 0, out.stdout + out.stderr
+    rec = json.load(open(tmp_path / "qwen2-1.5b__decode_32k__16x16.json"))
+    assert rec["ok"], rec.get("error")
+    assert rec["n_devices"] == 256
+    assert rec["memory"]["per_device_total"] < 16e9       # fits v5e
+    w = rec["walker"]
+    assert w["flops"] > 0 and w["collective_total"] > 0
+    assert rec["model_flops"] > 0

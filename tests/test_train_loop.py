@@ -1,0 +1,147 @@
+"""Training integration: loss decreases, exact resume, failure recovery,
+gradient-compression parity, ZeRO/microbatch equivalence."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.configs.run import RunConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.model_zoo import build_model
+from repro.optim.adamw import OptConfig
+from repro.optim.compression import Int8ErrorFeedback
+from repro.runtime.supervisor import (FailurePlan, InjectedFailure,
+                                      SupervisorConfig)
+from repro.train.loop import make_job, train
+from repro.train.step import init_train_state, make_train_step
+
+TINY = ModelConfig(name="tiny-lm", family="dense", num_layers=2, d_model=64,
+                   num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                   vocab_size=128, tie_embeddings=True)
+RUN = RunConfig(param_dtype="float32", compute_dtype="float32",
+                remat="none", loss_chunk=0)
+DATA = DataConfig(vocab_size=128, seq_len=64, global_batch=8, seed=3)
+OPT = OptConfig(lr=1e-2, warmup_steps=10, decay_steps=2000, weight_decay=0.0)
+
+
+def test_loss_decreases(tmp_path):
+    job = make_job(TINY, RUN, opt=OPT, data_cfg=DATA,
+                   ckpt_dir=str(tmp_path / "ck"),
+                   sup_cfg=SupervisorConfig(ckpt_every=1000))
+    out = train(job, 100, resume=False)
+    early = np.mean(out["losses"][:5])
+    late = np.mean(out["losses"][-5:])
+    assert late < early - 1.0, (early, late)
+
+
+def test_checkpoint_exact_resume(tmp_path):
+    # one continuous 20-step run
+    job1 = make_job(TINY, RUN, opt=OPT, data_cfg=DATA,
+                    ckpt_dir=str(tmp_path / "a"),
+                    sup_cfg=SupervisorConfig(ckpt_every=1000))
+    cont = train(job1, 20, resume=False)
+
+    # 10 steps, checkpoint, new job resumes to 20
+    job2 = make_job(TINY, RUN, opt=OPT, data_cfg=DATA,
+                    ckpt_dir=str(tmp_path / "b"),
+                    sup_cfg=SupervisorConfig(ckpt_every=10))
+    train(job2, 10, resume=False)
+    job3 = make_job(TINY, RUN, opt=OPT, data_cfg=DATA,
+                    ckpt_dir=str(tmp_path / "b"),
+                    sup_cfg=SupervisorConfig(ckpt_every=1000))
+    resumed = train(job3, 10, resume=True)
+
+    np.testing.assert_allclose(resumed["losses"][-1], cont["losses"][-1],
+                               rtol=1e-5)
+    a = jax.tree.leaves(cont["state"]["params"])
+    b = jax.tree.leaves(resumed["state"]["params"])
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+
+def test_failure_recovery(tmp_path):
+    job = make_job(TINY, RUN, opt=OPT, data_cfg=DATA,
+                   ckpt_dir=str(tmp_path / "ck"),
+                   sup_cfg=SupervisorConfig(ckpt_every=5))
+    plan = FailurePlan(fail_at_steps={12: "node_lost"})
+    out = train(job, 25, resume=False, failure_plan=plan)
+    rep = out["report"]
+    assert rep.restarts == 1
+    assert rep.restored_from == [10]         # last committed ckpt before 12
+    assert len(out["losses"]) >= 25          # replayed steps counted
+    # training still converged past the failure
+    assert np.mean(out["losses"][-3:]) < np.mean(out["losses"][:3])
+
+
+def test_straggler_detection(tmp_path):
+    import time as _t
+    job = make_job(TINY, RUN, opt=OPT, data_cfg=DATA,
+                   ckpt_dir=str(tmp_path / "ck"),
+                   sup_cfg=SupervisorConfig(ckpt_every=1000,
+                                            straggler_tolerance=2.0,
+                                            predicted_step_s=1e-4))
+    slow = {7}
+
+    def batch_fn(s):
+        if s in slow:
+            _t.sleep(0.3)
+        return job.data.batch_at(s)
+
+    state = init_train_state(job.model, jax.random.key(0))
+    state, _ = job.supervisor.run(state=state, step_fn=job.step_fn,
+                                  batch_fn=batch_fn, num_steps=10)
+    # the sleep lands inside step timing via batch_fn closure? No: batch_fn
+    # runs before the timer.  Use a slow step instead:
+    ev0 = len(job.supervisor.report.straggler_events)
+
+    def slow_step(state, batch):
+        _t.sleep(0.25)
+        return job.step_fn(state, batch)
+
+    job.supervisor._ema = 1e-3
+    state, _ = job.supervisor.run(state=state, step_fn=slow_step,
+                                  batch_fn=lambda s: job.data.batch_at(s),
+                                  num_steps=1)
+    assert len(job.supervisor.report.straggler_events) > ev0
+
+
+def test_grad_compression_converges(tmp_path):
+    base = make_job(TINY, RUN, opt=OPT, data_cfg=DATA,
+                    ckpt_dir=str(tmp_path / "a"),
+                    sup_cfg=SupervisorConfig(ckpt_every=1000))
+    comp = make_job(TINY, RUN, opt=OPT, data_cfg=DATA,
+                    ckpt_dir=str(tmp_path / "b"),
+                    sup_cfg=SupervisorConfig(ckpt_every=1000), compress=True)
+    out_b = train(base, 80, resume=False)
+    out_c = train(comp, 80, resume=False, compress=True)
+    # int8+EF tracks the uncompressed run closely
+    assert np.mean(out_c["losses"][-5:]) < np.mean(out_c["losses"][:5]) - 0.8
+    assert abs(np.mean(out_c["losses"][-5:]) -
+               np.mean(out_b["losses"][-5:])) < 0.35
+    saved = Int8ErrorFeedback.wire_bytes_saved(
+        out_b["state"]["params"])
+    assert saved > 0
+
+
+def test_microbatch_equivalence():
+    """m=1 and m=4 gradient accumulation give (near-)identical updates."""
+    model = build_model(TINY, RUN)
+    model4 = build_model(TINY, RunConfig(param_dtype="float32",
+                                         compute_dtype="float32",
+                                         remat="none", loss_chunk=0,
+                                         microbatches=4))
+    data = SyntheticLM(DATA)
+    batch = data.batch_at(0)
+    s1 = init_train_state(model, jax.random.key(0))
+    s4 = init_train_state(model4, jax.random.key(0))
+    step1 = jax.jit(make_train_step(model, OPT))
+    step4 = jax.jit(make_train_step(model4, OPT))
+    s1, m1 = step1(s1, batch)
+    s4, m4 = step4(s4, batch)
+    for a, b in zip(jax.tree.leaves(s1["params"]),
+                    jax.tree.leaves(s4["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-5, rtol=2e-4)
