@@ -1,0 +1,94 @@
+"""Scenario engine + fleet emulation benchmark.
+
+Part 1 drives every registered scenario through the full
+generate -> predict -> emulate -> store lifecycle and reports per-stage
+timings.  Part 2 is the fleet experiment: K profiles replayed concurrently
+through ``Emulator.emulate_many`` with a shared plan cache, against (a)
+serial cold replay with per-profile caches — the compile-dedup win — and
+(b) the sum of per-profile TTCs — the concurrency win.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+from benchmarks.common import emit
+from repro.core import Emulator, PlanCache, ProfileStore
+from repro.scenarios import generate, list_scenarios, run_scenario
+
+FAST_PARAMS = {
+    "training_scan": dict(n_steps=6, ckpt_every=3, flops_per_step=2e7,
+                          hbm_per_step=8e6, ckpt_bytes=2 << 20),
+    "serving_traffic": dict(n_requests=6, n_params=2e6, prefill_tokens=64,
+                            decode_tokens=8),
+    "fanout_straggler": dict(n_workers=4, work_flops=2e7, work_hbm=4e6),
+    "retry_storm": dict(n_tasks=4, work_flops=2e7, work_hbm=2e6),
+    "mixed_fleet": dict(total_samples=8),
+}
+
+
+def _params(name: str, fast: bool) -> dict:
+    # .get: scenarios registered after this file keep defaults in --fast
+    return FAST_PARAMS.get(name, {}) if fast else {}
+
+
+def main(fast: bool = False):
+    store = ProfileStore(tempfile.mkdtemp(prefix="synapse_bench_store_"))
+    rows = []
+    for name in list_scenarios():
+        params = _params(name, fast)
+        t0 = time.perf_counter()
+        prof = generate(name, **params)
+        gen_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        res = run_scenario(name, store=store, **params)
+        run_s = time.perf_counter() - t0
+        rows.append({"scenario": name, "n_samples": len(prof.samples),
+                     "gflops": prof.totals.flops / 1e9,
+                     "generate_s": gen_s, "run_scenario_s": run_s,
+                     "emulate_ttc_s": res.report.ttc_s})
+    emit("scenarios", rows)
+
+    # --- fleet: shared plan cache vs cold per-profile replay ---------------
+    k = 4 if fast else 8
+    profiles = [generate("training_scan", **_params("training_scan", True))
+                for _ in range(k)]
+    shared = Emulator(plan_cache=PlanCache())
+    t0 = time.perf_counter()
+    fleet = shared.emulate_many(profiles, max_workers=min(k, 4))
+    fleet_wall = time.perf_counter() - t0
+
+    # true serial replay, warm shared cache: the honest concurrency baseline
+    # (FleetReport.serial_s sums TTCs measured under contention)
+    t0 = time.perf_counter()
+    for p in profiles:
+        shared.emulate(p)
+    warm_serial = time.perf_counter() - t0
+
+    cold_plans = 0
+    t0 = time.perf_counter()
+    for p in profiles:
+        em = Emulator(plan_cache=PlanCache())
+        em.emulate(p)
+        cold_plans += em.plan_cache.plans_built
+    cold_total = time.perf_counter() - t0
+
+    emit("scenario_fleet", [{
+        "k_profiles": k,
+        "fleet_wall_s": fleet_wall,
+        "fleet_serial_s": warm_serial,
+        "fleet_speedup": warm_serial / fleet_wall if fleet_wall else 0.0,
+        "fleet_speedup_estimate": fleet.speedup,
+        "fleet_total_s": fleet.wall_s,
+        "cold_total_s": cold_total,
+        "shared_plans_built": fleet.cache_stats["plans_built"],
+        "shared_plan_hits": fleet.cache_stats["hits"],
+        "cold_plans_built": cold_plans,
+    }])
+    assert fleet.cache_stats["plans_built"] < cold_plans, \
+        "shared plan cache must build fewer plans than K cold replays"
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -18,7 +18,8 @@ def main() -> None:
     from benchmarks import (bench_atoms, bench_emulation_portability,
                             bench_emulation_same_host,
                             bench_profiling_consistency,
-                            bench_profiling_overhead, bench_roofline)
+                            bench_profiling_overhead, bench_roofline,
+                            bench_scenarios)
     suite = [
         ("atoms", bench_atoms.main),
         ("profiling_overhead", bench_profiling_overhead.main),
@@ -26,6 +27,7 @@ def main() -> None:
         ("emulation_same_host", bench_emulation_same_host.main),
         ("emulation_portability", bench_emulation_portability.main),
         ("roofline", bench_roofline.main),
+        ("scenarios", bench_scenarios.main),
     ]
     for name, fn in suite:
         if args.only and args.only not in name:

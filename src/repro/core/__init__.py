@@ -6,9 +6,10 @@ profile once (static watcher over compiled HLO, or runtime /proc watchers)
 -> predict TTC on hardware you don't have (roofline terms per sample).
 """
 from repro.core.atoms import (CollectiveAtom, ComputeAtom, MemoryAtom,  # noqa
-                              StorageAtom)
+                              PlanCache, StorageAtom)
 from repro.core.calibrate import HostCalibration, calibrate  # noqa
-from repro.core.emulator import EmulationReport, Emulator  # noqa
+from repro.core.emulator import (EmulationReport, Emulator,  # noqa
+                                 FleetReport)
 from repro.core.hardware import (HOST_ARCHER_NODE, HOST_I7_M620,  # noqa
                                  HOST_STAMPEDE_NODE, TPU_V5E, TPU_V5E_2POD,
                                  TPU_V5E_POD, HardwareSpec, get_spec)
@@ -17,8 +18,9 @@ from repro.core.hlo_analysis import (HloCost, ModuleCost, analyze_hlo,  # noqa
 from repro.core.metrics import (ResourceVector, Sample,  # noqa
                                 SynapseProfile)
 from repro.core.predictor import (Prediction, RooflineTerms, compare,  # noqa
-                                  from_dryrun_artifact, predict,
-                                  predict_resources, terms_for)
+                                  from_dryrun_artifact, llm_request_resources,
+                                  predict, predict_fleet, predict_resources,
+                                  terms_for)
 from repro.core.static_profiler import profile_compiled, profile_step  # noqa
 from repro.core.store import ProfileStore  # noqa
 from repro.core.watchers import (CPUWatcher, IOWatcher, MemWatcher,  # noqa

@@ -24,10 +24,11 @@ from __future__ import annotations
 import math
 import os
 import tempfile
+import threading
 import time
 from dataclasses import dataclass
 from functools import partial
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,8 +38,47 @@ from repro.core.calibrate import HostCalibration
 from repro.core.hardware import HardwareSpec
 
 
+class PlanCache:
+    """Shared, keyed memo of planned atom thunks (fleet emulation).
+
+    Keys are the atom's full plan signature — (kind, backend/config knobs,
+    quantized amount) — so identical (atom, amount) plans across a fleet of
+    concurrently-replayed profiles are built, and their XLA programs traced,
+    exactly once.  The lock is held across the build so no plan is ever
+    constructed twice; the returned thunks are safe to execute concurrently
+    (jitted callables with read-only operands).
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._plans: Dict[Tuple, Callable[[], float]] = {}
+        self.plans_built = 0
+        self.hits = 0
+
+    def get_or_build(self, key: Tuple,
+                     builder: Callable[[], Callable[[], float]]
+                     ) -> Callable[[], float]:
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is None:
+                plan = builder()
+                self._plans[key] = plan
+                self.plans_built += 1
+            else:
+                self.hits += 1
+            return plan
+
+    def __len__(self) -> int:
+        return len(self._plans)
+
+    def stats(self) -> Dict[str, int]:
+        return {"plans_built": self.plans_built, "hits": self.hits,
+                "size": len(self._plans)}
+
+
 class Atom:
     resource = "abstract"
+    cache: Optional[PlanCache] = None      # set by fleet-mode emulators
 
     def plan(self, amount: float) -> Callable[[], float]:
         """Returns a thunk that consumes ``amount`` and returns actual amount."""
@@ -46,6 +86,13 @@ class Atom:
 
     def seconds(self, amount: float, hw: HardwareSpec) -> float:
         raise NotImplementedError
+
+    def _cached(self, key: Tuple,
+                builder: Callable[[], Callable[[], float]]
+                ) -> Callable[[], float]:
+        if self.cache is None:
+            return builder()
+        return self.cache.get_or_build(key, builder)
 
 
 # ---------------------------------------------------------------------------
@@ -95,12 +142,20 @@ class ComputeAtom(Atom):
                               / self.efficiency)), 0)
         if iters == 0:
             return lambda: 0.0
+        # Key on the quantized amount (iters), not the raw flops: amounts
+        # that round to the same loop count are the same plan, and the thunk
+        # reports the amount the plan actually emulates so sharers agree.
+        key = ("compute", self.backend, self.tile, self.efficiency, iters)
+        return self._cached(key, lambda: self._build_plan(iters))
+
+    def _build_plan(self, iters: int) -> Callable[[], float]:
         fn = self._loop_fn()
         x = jnp.eye(self.tile, dtype=jnp.float32) * 0.5
+        emulated = iters * self.flops_per_iter() * self.efficiency
 
         def run():
             fn(x, iters).block_until_ready()
-            return flops
+            return emulated
         return run
 
     def seconds(self, flops: float, hw: HardwareSpec) -> float:
@@ -145,6 +200,10 @@ class MemoryAtom(Atom):
         iters = max(int(round(nbytes / per_iter)), 0)
         if iters == 0:
             return lambda: 0.0
+        key = ("memory", self.backend, self.block_bytes, iters)
+        return self._cached(key, lambda: self._build_plan(iters, per_iter))
+
+    def _build_plan(self, iters: int, per_iter: float) -> Callable[[], float]:
         fn = self._stream_fn()
         x = jnp.ones((self.block_bytes // 4,), jnp.float32)
 
@@ -206,6 +265,18 @@ class CollectiveAtom(Atom):
         shard_bytes = wire_bytes / max(factor, 1e-9)
         n_elems = max(int(shard_bytes / 4) * n, n)
         n_elems = (n_elems // n) * n or n
+        # Quantized key: amounts rounding to the same shard size share one
+        # plan (cache sharers report the first builder's wire_bytes — the
+        # emulator tracks consumption from the profile, not thunk returns).
+        # Mesh identity is part of the key: a shared cache may serve
+        # emulators on different meshes, and a shard_map is bound to its.
+        mesh_id = (tuple(sorted(self.mesh.shape.items())),
+                   tuple(d.id for d in self.mesh.devices.flat))
+        key = ("collective", self.kind, self.axis, mesh_id, n_elems)
+        return self._cached(key, lambda: self._build_plan(n_elems, wire_bytes))
+
+    def _build_plan(self, n_elems: int, wire_bytes: float
+                    ) -> Callable[[], float]:
         fn = self._coll_fn(n_elems)
         x = jnp.ones((n_elems,), jnp.float32)
 
@@ -232,12 +303,31 @@ class StorageAtom(Atom):
         self.block_bytes = block_bytes
         self.dir = directory or tempfile.gettempdir()
         self._buf = os.urandom(block_bytes)
+        self._paths: set = set()
+
+    def _path(self) -> str:
+        # Keyed by planning thread so concurrent fleet workers never write
+        # the same scratch file; one worker reuses its file across samples.
+        # Tracked so fleet runs can clean up (thread idents churn per pool).
+        p = os.path.join(self.dir, f"synapse_atom_{os.getpid()}_"
+                                   f"{threading.get_ident()}.bin")
+        self._paths.add(p)
+        return p
+
+    def cleanup(self) -> None:
+        """Remove scratch files created by past plans."""
+        while self._paths:
+            p = self._paths.pop()
+            try:
+                os.unlink(p)
+            except OSError:
+                pass
 
     def plan_write(self, nbytes: float) -> Callable[[], float]:
         blocks = max(int(nbytes // self.block_bytes), 0)
         if blocks == 0:
             return lambda: 0.0
-        path = os.path.join(self.dir, f"synapse_atom_{os.getpid()}.bin")
+        path = self._path()
 
         def run():
             with open(path, "wb") as f:
@@ -250,7 +340,7 @@ class StorageAtom(Atom):
 
     def plan_read(self, nbytes: float) -> Callable[[], float]:
         blocks = max(int(nbytes // self.block_bytes), 0)
-        path = os.path.join(self.dir, f"synapse_atom_{os.getpid()}.bin")
+        path = self._path()
         if blocks == 0:
             return lambda: 0.0
 

@@ -16,11 +16,12 @@ from __future__ import annotations
 
 import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.core.atoms import (CollectiveAtom, ComputeAtom, MemoryAtom,
-                              StorageAtom)
+                              PlanCache, StorageAtom)
 from repro.core.calibrate import HostCalibration, calibrate
 from repro.core.hardware import HardwareSpec
 from repro.core.metrics import ResourceVector, Sample, SynapseProfile
@@ -43,15 +44,46 @@ class EmulationReport:
                 "storage_write_bytes": self.consumed.storage_write_bytes}
 
 
+@dataclass
+class FleetReport:
+    """Result of ``Emulator.emulate_many``: K profiles replayed concurrently."""
+    reports: List[EmulationReport]
+    wall_s: float                        # concurrent fleet wall time
+    serial_s: float                      # sum of per-profile TTCs
+    max_workers: int
+    cache_stats: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def n_profiles(self) -> int:
+        return len(self.reports)
+
+    @property
+    def speedup(self) -> float:
+        """Estimated concurrency win: sum of per-profile TTCs over fleet
+        wall time.  Per-profile TTCs are measured *under* concurrent
+        contention, so on a saturated host this over-states the true
+        back-to-back-vs-fleet ratio; ``bench_scenarios`` measures real
+        serial replay separately for the honest number."""
+        return self.serial_s / self.wall_s if self.wall_s else 0.0
+
+    def summary(self) -> Dict:
+        return {"n_profiles": self.n_profiles, "wall_s": self.wall_s,
+                "serial_s": self.serial_s, "speedup": self.speedup,
+                "max_workers": self.max_workers, **self.cache_stats}
+
+
 class Emulator:
     def __init__(self, calib: Optional[HostCalibration] = None, mesh=None,
                  backend: str = "jnp", compute_tile: int = 256,
                  mem_block: int = 1 << 24, storage_block: int = 1 << 20,
-                 efficiency: float = 1.0, speed: float = 1.0):
+                 efficiency: float = 1.0, speed: float = 1.0,
+                 plan_cache: Optional[PlanCache] = None):
         """``efficiency``: paper's CPU-efficiency knob (see ComputeAtom);
         ``speed`` scales resource amounts (emulate faster/slower hosts:
         the portability benchmark throttles CPU/disk independently via
-        ``flops_scale``/``storage_scale`` instead)."""
+        ``flops_scale``/``storage_scale`` instead); ``plan_cache``: share
+        compiled atom plans across emulators / fleet workers (see
+        ``emulate_many``)."""
         self.calib = calib or calibrate()
         self.compute = ComputeAtom(self.calib, tile=compute_tile,
                                    efficiency=efficiency, backend=backend)
@@ -60,6 +92,19 @@ class Emulator:
         self.storage = StorageAtom(self.calib, block_bytes=storage_block)
         self.collective = CollectiveAtom(mesh) if mesh is not None else None
         self.speed = speed
+        self.plan_cache = None
+        self._fleet_lock = threading.Lock()
+        if plan_cache is not None:
+            self.set_plan_cache(plan_cache)
+
+    def set_plan_cache(self, cache: Optional[PlanCache]) -> None:
+        """Route compute/memory/collective plans through a shared cache
+        (``None`` detaches it — plans go back to per-call construction)."""
+        self.plan_cache = cache
+        self.compute.cache = cache
+        self.memory.cache = cache
+        if self.collective is not None:
+            self.collective.cache = cache
 
     def _plan_sample(self, r: ResourceVector, flops_scale=1.0,
                      storage_scale=1.0, mem_scale=1.0):
@@ -121,6 +166,58 @@ class Emulator:
                                n_samples=len(per_sample), consumed=consumed,
                                per_sample_s=per_sample,
                                planned=profile.totals)
+
+    def emulate_many(self, profiles: List[SynapseProfile], *,
+                     max_workers: int = 4, flops_scale: float = 1.0,
+                     storage_scale: float = 1.0, mem_scale: float = 1.0,
+                     verify: bool = True) -> FleetReport:
+        """Fleet mode: replay many profiles concurrently on worker threads.
+
+        Each profile replays on exactly one worker, so the per-profile
+        sample-ordering contract is intact; ordering *across* profiles is
+        deliberately unconstrained (a fleet has no inter-profile
+        dependencies).  All workers share this emulator's atoms through a
+        keyed plan cache, so identical (atom, amount) plans are built — and
+        their XLA programs traced — once for the whole fleet instead of once
+        per profile.
+        """
+        # One fleet at a time per emulator: the atoms, ephemeral cache
+        # attach/detach and scratch-file cleanup are instance state.
+        with self._fleet_lock:
+            cache = self.plan_cache
+            ephemeral = cache is None
+            if ephemeral:
+                # Scope the auto-created cache to this call: retained plans
+                # pin their operand arrays, so a long-lived emulator must
+                # not keep accumulating them as a side effect of one fleet
+                # replay.
+                cache = PlanCache()
+                self.set_plan_cache(cache)
+            before = cache.stats()
+            try:
+                t0 = time.perf_counter()
+                with ThreadPoolExecutor(
+                        max_workers=max(max_workers, 1)) as pool:
+                    futures = [pool.submit(self.emulate, p,
+                                           flops_scale=flops_scale,
+                                           storage_scale=storage_scale,
+                                           mem_scale=mem_scale, verify=verify)
+                               for p in profiles]
+                    reports = [f.result() for f in futures]
+                wall = time.perf_counter() - t0
+            finally:
+                if ephemeral:
+                    self.set_plan_cache(None)
+                self.storage.cleanup()   # pool threads churn -> fresh
+                                         # scratch files per run
+            # report this call's activity, not cache-lifetime totals
+            after = cache.stats()
+            stats = {k: after[k] - before[k] for k in ("plans_built", "hits")}
+            stats["size"] = after["size"]
+        return FleetReport(reports=reports, wall_s=wall,
+                           serial_s=sum(r.ttc_s for r in reports),
+                           max_workers=max_workers,
+                           cache_stats=stats)
 
 
 def _collapse(samples: List[Sample]):

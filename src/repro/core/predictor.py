@@ -16,7 +16,7 @@ which flips across hardware — ``compare()`` reproduces that flip.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.hardware import HardwareSpec
 from repro.core.metrics import ResourceVector, SynapseProfile
@@ -121,6 +121,53 @@ def compare(profile: SynapseProfile, specs: List[HardwareSpec]) -> Dict:
                         "dominant_total": p.terms.dominant,
                         "dominant_histogram": p.dominant_histogram}
     return out
+
+
+def llm_request_resources(prefill_tokens: int, decode_tokens: int,
+                          n_params: float, bytes_per_param: float = 2.0,
+                          kv_bytes_per_token: float = 0.0
+                          ) -> Tuple[ResourceVector, ResourceVector]:
+    """Map one serving request to (prefill, decode) resource vectors.
+
+    The standard LLM roofline split: prefill does 2·P flops per prompt token
+    against one weight read (compute-bound for long prompts); decode does
+    2·P flops per generated token but re-reads every weight byte per token
+    (memory-bound).  ``terms_for`` on the returned vectors reproduces that
+    dominant-resource flip on any HardwareSpec.
+    """
+    weight_bytes = n_params * bytes_per_param
+    prefill = ResourceVector(
+        flops=2.0 * n_params * prefill_tokens,
+        hbm_bytes=weight_bytes + kv_bytes_per_token * prefill_tokens)
+    # decode token i reads a context of prefill + i tokens; summed over the
+    # generation that's an average context of prefill + decode/2
+    decode = ResourceVector(
+        flops=2.0 * n_params * decode_tokens,
+        hbm_bytes=decode_tokens * (weight_bytes + kv_bytes_per_token *
+                                   (prefill_tokens + decode_tokens / 2.0)))
+    return prefill, decode
+
+
+def predict_fleet(profiles: List[SynapseProfile], hw: HardwareSpec,
+                  storage_bps: Optional[float] = None) -> Dict:
+    """TTC bounds for a fleet of profiles sharing one machine.
+
+    ``serial_s`` replays them back-to-back (sum of ordered-overlap TTCs);
+    ``concurrent_lower_s`` is the roofline on the *summed* resource totals —
+    no schedule can beat it on this hardware, so the pair brackets any real
+    fleet execution.
+    """
+    preds = [predict(p, hw, storage_bps) for p in profiles]
+    total = ResourceVector()
+    for p in profiles:
+        total = total.add(p.totals)
+    agg = terms_for(total, hw, storage_bps)
+    return {"hw": hw.name, "n_profiles": len(profiles),
+            "serial_s": sum(p.ttc_max for p in preds),
+            "concurrent_lower_s": agg.t_max,
+            "dominant_total": agg.dominant,
+            "per_profile": [{"ttc_max": p.ttc_max, "ttc_sum": p.ttc_sum,
+                             "dominant": p.terms.dominant} for p in preds]}
 
 
 def from_dryrun_artifact(rec: Dict) -> ResourceVector:

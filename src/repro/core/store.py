@@ -80,6 +80,9 @@ class ProfileStore:
         ent = idx.get(h)
         if not ent:
             return []
+        return self._load_runs(ent)
+
+    def _load_runs(self, ent: Dict) -> List[SynapseProfile]:
         out = []
         for run in ent["runs"]:
             doc = ""
@@ -92,6 +95,23 @@ class ProfileStore:
     def latest(self, command: str, tags=None) -> Optional[SynapseProfile]:
         profiles = self.query(command, tags)
         return profiles[-1] if profiles else None
+
+    def find(self, tags: Dict[str, str], command: Optional[str] = None
+             ) -> List[SynapseProfile]:
+        """All profiles whose tags are a superset of ``tags``.
+
+        Cross-key lookup the exact-(command, tags) ``query`` can't do: e.g.
+        every stored run with ``{"scenario": "serving_traffic"}`` regardless
+        of the parameter tags it was generated with.
+        """
+        idx = self._load_index()
+        out = []
+        for _, ent in sorted(idx.items()):
+            if command is not None and ent["command"] != command:
+                continue
+            if all(ent["tags"].get(k) == v for k, v in tags.items()):
+                out.extend(self._load_runs(ent))
+        return out
 
     def keys(self) -> List[Dict]:
         idx = self._load_index()

@@ -116,7 +116,9 @@ class MemWatcher(WatcherBase):
                 rss = int(line.split()[1]) * 1024
             elif line.startswith("VmHWM:"):
                 peak = int(line.split()[1]) * 1024
-        self.samples.append({"t": now, "rss": rss, "peak": peak})
+        # Some kernels/containers omit VmHWM; the max sampled RSS is the
+        # best observable peak there.
+        self.samples.append({"t": now, "rss": rss, "peak": peak or rss})
 
     def _post_process(self):
         if self.samples:

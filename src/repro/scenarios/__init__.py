@@ -1,0 +1,21 @@
+"""Synthetic scenario engine: generators that emit SynapseProfiles directly.
+
+The registry (``base``) plus one module per scenario family — importing this
+package registers them all:
+
+  * ``training_scan``     — identical train steps + periodic checkpoint bursts
+  * ``serving_traffic``   — Poisson arrivals over prefill/decode rooflines
+  * ``fanout_straggler``  — N parallel workers, one tail-latency outlier
+  * ``retry_storm``       — flaky work re-consumed under exponential backoff
+  * ``mixed_fleet``       — weighted blend of the families above
+
+``driver.run_scenario`` wires a scenario end-to-end
+(generate -> predict -> emulate -> store); ``driver.run_fleet`` replays many
+concurrently through ``Emulator.emulate_many``.
+"""
+from repro.scenarios import fanout, mixed, retry, serving, training  # noqa
+from repro.scenarios.base import (ScenarioSpec, generate,  # noqa
+                                  get_scenario, list_scenarios, register,
+                                  validate)
+from repro.scenarios.driver import (DEFAULT_SPECS, FleetResult,  # noqa
+                                    ScenarioResult, run_fleet, run_scenario)

@@ -1,0 +1,95 @@
+"""End-to-end scenario driver: generate -> predict -> emulate -> store.
+
+``run_scenario`` pushes one synthesized profile through the paper's whole
+lifecycle on machines we do have (emulation atoms) and machines we don't
+(roofline prediction via ``predictor.compare``), then persists it to a
+``ProfileStore`` under its scenario tags.  ``run_fleet`` does the same for a
+batch of scenarios and replays them concurrently through
+``Emulator.emulate_many`` with a shared plan cache.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.emulator import EmulationReport, Emulator, FleetReport
+from repro.core.hardware import (HOST_I7_M620, HOST_STAMPEDE_NODE, TPU_V5E,
+                                 HardwareSpec)
+from repro.core.metrics import SynapseProfile
+from repro.core.predictor import compare, predict_fleet
+from repro.core.store import ProfileStore
+from repro.scenarios.base import generate
+
+DEFAULT_SPECS = [TPU_V5E, HOST_I7_M620, HOST_STAMPEDE_NODE]
+
+
+@dataclass
+class ScenarioResult:
+    name: str
+    profile: SynapseProfile
+    predictions: Dict[str, Dict]             # hw name -> compare() row
+    report: Optional[EmulationReport] = None
+    run_id: Optional[str] = None
+
+    def summary(self) -> Dict:
+        out = {"scenario": self.name, "n_samples": len(self.profile.samples),
+               "gflops": self.profile.totals.flops / 1e9,
+               "predictions": self.predictions}
+        if self.report is not None:
+            out["emulated_ttc_s"] = self.report.ttc_s
+        if self.run_id is not None:
+            out["run_id"] = self.run_id
+        return out
+
+
+def run_scenario(name: str, *, store: Optional[ProfileStore] = None,
+                 specs: Optional[Sequence[HardwareSpec]] = None,
+                 emulator: Optional[Emulator] = None, emulate: bool = True,
+                 **params) -> ScenarioResult:
+    """Generate one scenario, predict it across hardware, emulate it here,
+    and (optionally) persist it under its scenario tags."""
+    profile = generate(name, **params)
+    predictions = compare(profile, list(specs or DEFAULT_SPECS))
+    profile.meta["predictions"] = predictions    # persisted with the profile
+    report = None
+    if emulate:
+        report = (emulator or Emulator()).emulate(profile)
+        profile.meta["emulated_ttc_s"] = report.ttc_s
+    run_id = store.add(profile) if store is not None else None
+    return ScenarioResult(name=name, profile=profile, predictions=predictions,
+                          report=report, run_id=run_id)
+
+
+@dataclass
+class FleetResult:
+    results: List[ScenarioResult]
+    fleet: FleetReport
+    predictions: Dict = field(default_factory=dict)  # predict_fleet() row
+
+
+def run_fleet(jobs: Sequence[Tuple[str, Dict]], *,
+              store: Optional[ProfileStore] = None,
+              hw: HardwareSpec = TPU_V5E,
+              emulator: Optional[Emulator] = None,
+              max_workers: int = 4) -> FleetResult:
+    """Synthesize a fleet of scenarios and replay it concurrently.
+
+    ``jobs`` is a sequence of (scenario_name, params) pairs.  Profiles are
+    generated and predicted up front, then handed to ``emulate_many`` so the
+    shared plan cache dedups identical (atom, amount) plans fleet-wide;
+    profiles are stored only after emulation so the persisted meta carries
+    ``emulated_ttc_s`` exactly like single ``run_scenario`` calls.
+    """
+    results = [run_scenario(name, emulate=False, **params)
+               for name, params in jobs]
+    em = emulator or Emulator()
+    fleet = em.emulate_many([r.profile for r in results],
+                            max_workers=max_workers)
+    for r, rep in zip(results, fleet.reports):
+        r.report = rep
+        r.profile.meta["emulated_ttc_s"] = rep.ttc_s
+        if store is not None:
+            r.run_id = store.add(r.profile)
+    return FleetResult(results=results, fleet=fleet,
+                       predictions=predict_fleet(
+                           [r.profile for r in results], hw))

@@ -1,0 +1,39 @@
+"""Hypothesis shim: property tests degrade to skips when hypothesis is absent.
+
+CI installs hypothesis so the property tests actually run; a bare host
+without it must still *collect* every test module (the example-based tests
+keep running, the ``@given`` ones skip with a clear reason).  Import from
+here instead of from ``hypothesis`` directly:
+
+    from _hypothesis_compat import given, settings, st
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _StrategyStub:
+        """Stands in for ``strategies``: any attribute/call chain yields
+        itself, so module-level strategy definitions evaluate harmlessly."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _StrategyStub()

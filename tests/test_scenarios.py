@@ -1,0 +1,191 @@
+"""Scenario engine + concurrent fleet emulation.
+
+Registry contract: every registered scenario emits a well-formed
+SynapseProfile (ordered indices, finite nonnegative resources, sample
+counts matching its params), deterministically in its seed, and
+round-trips through the ProfileStore under its scenario tags.  Fleet
+contract: ``emulate_many`` preserves per-profile consumption totals while
+building strictly fewer plans than K independent replays.
+"""
+import pytest
+
+from repro.core import Emulator, PlanCache, ProfileStore
+from repro.scenarios import (generate, get_scenario, list_scenarios,
+                             run_scenario, validate)
+
+EXPECTED = {"training_scan", "serving_traffic", "fanout_straggler",
+            "retry_storm", "mixed_fleet"}
+
+# Small sizes so generate+emulate stays fast in CI.
+FAST = {
+    "training_scan": dict(n_steps=6, ckpt_every=3, flops_per_step=1e7,
+                          hbm_per_step=4e6, ckpt_bytes=2 << 20),
+    "serving_traffic": dict(n_requests=3, n_params=1e6, prefill_tokens=32,
+                            decode_tokens=4),
+    "fanout_straggler": dict(n_workers=4, work_flops=1e7, work_hbm=2e6),
+    "retry_storm": dict(n_tasks=4, work_flops=1e7, work_hbm=2e6),
+    "mixed_fleet": dict(total_samples=6),
+}
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_contents():
+    assert set(list_scenarios()) == EXPECTED
+    for name in EXPECTED:
+        spec = get_scenario(name)
+        assert spec.description
+        assert spec.defaults
+
+
+@pytest.mark.parametrize("name", sorted(EXPECTED))
+def test_scenario_well_formed(name):
+    p = generate(name, **FAST[name])
+    validate(p)                              # ordered indices, nonneg, finite
+    assert p.command == f"scenario:{name}"
+    assert p.tags["scenario"] == name
+    assert p.totals.flops > 0
+    for s in p.samples:
+        r = s.resources
+        assert r.flops >= 0 and r.hbm_bytes >= 0
+        assert r.storage_read_bytes >= 0 and r.storage_write_bytes >= 0
+        assert all(v >= 0 for v in r.ici_bytes.values())
+
+
+def test_sample_counts_match_params():
+    assert len(generate("training_scan", n_steps=7).samples) == 7
+    assert len(generate("serving_traffic", n_requests=5).samples) == 10
+    assert len(generate("fanout_straggler", n_workers=6).samples) == 6
+    assert len(generate("mixed_fleet", total_samples=9).samples) == 9
+    p = generate("retry_storm", n_tasks=5, max_retries=2, seed=3)
+    assert 5 <= len(p.samples) <= 5 * 3
+    assert len(p.samples) == p.meta["total_attempts"]
+
+
+def test_training_scan_checkpoint_bursts():
+    p = generate("training_scan", n_steps=8, ckpt_every=4, ckpt_bytes=1e6)
+    writes = [s.resources.storage_write_bytes for s in p.samples]
+    assert [w > 0 for w in writes] == [False, False, False, True] * 2
+    assert p.meta["n_ckpts"] == 2
+
+
+def test_fanout_straggler_outlier():
+    p = generate("fanout_straggler", n_workers=5, straggler_index=2,
+                 straggler_factor=8.0, jitter=0.0)
+    flops = [s.resources.flops for s in p.samples]
+    assert max(flops) == flops[2] == pytest.approx(8.0 * flops[0])
+    assert p.samples[2].label == "straggler"
+
+
+def test_serving_traffic_prefill_decode_split():
+    p = generate("serving_traffic", n_requests=2, n_params=1e6,
+                 prefill_tokens=64, decode_tokens=8)
+    prefill, decode = p.samples[0].resources, p.samples[1].resources
+    assert prefill.flops == pytest.approx(2.0 * 1e6 * 64)
+    assert decode.hbm_bytes > prefill.hbm_bytes     # decode re-reads weights
+    assert len(p.meta["arrival_s"]) == 2
+    assert p.meta["arrival_s"] == sorted(p.meta["arrival_s"])
+
+
+def test_deterministic_in_seed():
+    for name in sorted(EXPECTED):
+        kw = dict(FAST[name])
+        if "seed" in get_scenario(name).defaults:
+            kw["seed"] = 123
+        a = generate(name, **kw)
+        b = generate(name, **kw)
+        assert [s.to_dict() for s in a.samples] == \
+               [s.to_dict() for s in b.samples], name
+    # and the seed actually matters where there is one
+    a = generate("serving_traffic", n_requests=4, seed=0)
+    b = generate("serving_traffic", n_requests=4, seed=1)
+    assert a.meta["arrival_s"] != b.meta["arrival_s"]
+
+
+def test_generate_rejects_unknown():
+    with pytest.raises(KeyError):
+        generate("no_such_scenario")
+    with pytest.raises(TypeError):
+        generate("training_scan", bogus_param=1)
+    with pytest.raises(ValueError):
+        generate("training_scan", n_steps=0)
+
+
+# ---------------------------------------------------------------------------
+# store round-trip under scenario tags
+# ---------------------------------------------------------------------------
+
+def test_store_roundtrip_under_scenario_tags(tmp_path):
+    store = ProfileStore(str(tmp_path))
+    for name in sorted(EXPECTED):
+        run_scenario(name, store=store, emulate=False, **FAST[name])
+    for name in sorted(EXPECTED):
+        got = store.find({"scenario": name})
+        assert len(got) == 1, name
+        prof = got[0]
+        ref = generate(name, **FAST[name])
+        assert len(prof.samples) == len(ref.samples)
+        assert prof.totals.flops == pytest.approx(ref.totals.flops)
+        assert prof.tags["scenario"] == name
+        assert "predictions" in prof.meta       # driver persists predictions
+        # exact-key query still works with the full generated tag set
+        assert store.latest(prof.command, prof.tags) is not None
+    assert store.find({"scenario": "no_such"}) == []
+
+
+# ---------------------------------------------------------------------------
+# fleet emulation: deterministic seeds + shared plan cache
+# ---------------------------------------------------------------------------
+
+def _fleet_profiles(k):
+    # seeded + jitter-free so all K profiles are bit-identical; amounts are
+    # big enough for at least one compute/memory atom iteration (tile 256 =
+    # 33.5 MFLOP/iter, block 16 MiB = 33.5 MB/iter), so plans really build
+    return [generate("fanout_straggler", n_workers=3, work_flops=5e7,
+                     work_hbm=4e7, straggler_index=1, straggler_factor=4.0,
+                     jitter=0.0, seed=11) for _ in range(k)]
+
+
+def test_emulate_many_matches_single_and_shares_plans():
+    k = 3
+    profiles = _fleet_profiles(k)
+    assert [s.to_dict() for s in profiles[0].samples] == \
+           [s.to_dict() for s in profiles[-1].samples]
+
+    single = Emulator(plan_cache=PlanCache())
+    ref = single.emulate(profiles[0])
+    per_profile_plans = single.plan_cache.plans_built
+    assert per_profile_plans >= 1
+
+    fleet_em = Emulator(plan_cache=PlanCache())
+    fleet = fleet_em.emulate_many(profiles, max_workers=k)
+    assert fleet.n_profiles == k
+    assert fleet.wall_s > 0 and fleet.serial_s > 0
+    for rep in fleet.reports:
+        assert rep.n_samples == ref.n_samples
+        assert rep.consumed.flops == pytest.approx(ref.consumed.flops,
+                                                   rel=1e-9)
+        assert rep.consumed.hbm_bytes == pytest.approx(
+            ref.consumed.hbm_bytes, rel=1e-9)
+
+    stats = fleet.cache_stats
+    # the shared cache compiles each distinct (atom, amount) once for the
+    # whole fleet: strictly fewer than K independent replays would
+    assert stats["plans_built"] == per_profile_plans
+    assert stats["plans_built"] < k * per_profile_plans
+    assert stats["hits"] >= (k - 1) * per_profile_plans
+
+
+def test_emulate_many_with_storage_leg(tmp_path):
+    profiles = [generate("training_scan", n_steps=4, ckpt_every=2,
+                         flops_per_step=4e7, hbm_per_step=3.4e7,
+                         ckpt_bytes=2 << 20) for _ in range(2)]
+    em = Emulator()               # no cache: fleet mode scopes one per call
+    fleet = em.emulate_many(profiles, max_workers=2)
+    assert em.plan_cache is None              # not retained past the call
+    assert fleet.cache_stats["plans_built"] >= 1
+    for rep in fleet.reports:
+        assert rep.consumed.storage_write_bytes == pytest.approx(
+            2 * (2 << 20))                    # 2 checkpoints of 2 MiB

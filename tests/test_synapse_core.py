@@ -14,7 +14,7 @@ import time
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (HardwareSpec, Prediction, ProfileStore,
                         ResourceVector, RuntimeProfiler, Sample,
