@@ -15,13 +15,15 @@ def main() -> None:
     ap.add_argument("--only", default="")
     args = ap.parse_args()
 
-    from benchmarks import (bench_atoms, bench_emulation_portability,
+    from benchmarks import (bench_atoms, bench_dispatch,
+                            bench_emulation_portability,
                             bench_emulation_same_host,
                             bench_profiling_consistency,
                             bench_profiling_overhead, bench_roofline,
                             bench_scenarios)
     suite = [
         ("atoms", bench_atoms.main),
+        ("dispatch", bench_dispatch.main),
         ("profiling_overhead", bench_profiling_overhead.main),
         ("profiling_consistency", bench_profiling_consistency.main),
         ("emulation_same_host", bench_emulation_same_host.main),

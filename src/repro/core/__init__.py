@@ -6,10 +6,13 @@ profile once (static watcher over compiled HLO, or runtime /proc watchers)
 -> predict TTC on hardware you don't have (roofline terms per sample).
 """
 from repro.core.atoms import (CollectiveAtom, ComputeAtom, MemoryAtom,  # noqa
-                              PlanCache, StorageAtom)
+                              Plan, PlanCache, StorageAtom)
 from repro.core.calibrate import HostCalibration, calibrate  # noqa
 from repro.core.emulator import (EmulationReport, Emulator,  # noqa
                                  FleetReport)
+from repro.core.schedule import (BarrierStep, CompiledSchedule,  # noqa
+                                 FusedSegment, SegmentRunner,
+                                 compile_schedule)
 from repro.core.hardware import (HOST_ARCHER_NODE, HOST_I7_M620,  # noqa
                                  HOST_STAMPEDE_NODE, TPU_V5E, TPU_V5E_2POD,
                                  TPU_V5E_POD, HardwareSpec, get_spec)

@@ -16,8 +16,12 @@ Paper §IV-B, adapted per DESIGN.md §2:
                      from the paper; block size is the tunable the paper
                      discusses in §IV-E.3).
 
-Atoms expose ``plan(amount) -> callable`` so the emulator can pre-compile,
-and ``seconds(amount, hw)`` — the model cost used by the TTC predictor.
+Atoms expose ``plan(amount) -> Plan`` so the emulator can pre-compile, and
+``seconds(amount, hw)`` — the model cost used by the TTC predictor.  A
+``Plan`` separates *launch* (enqueue device work, returns an unsynced jax
+value; host plans do the work and return ``None``) from *sync*, so the
+emulator can dispatch every atom of a sample asynchronously and block once
+at the sample barrier; calling the plan is the legacy blocking contract.
 """
 from __future__ import annotations
 
@@ -38,34 +42,86 @@ from repro.core.calibrate import HostCalibration
 from repro.core.hardware import HardwareSpec
 
 
+class Plan:
+    """One planned resource consumption.
+
+    ``launch()`` enqueues the work: device plans return the unsynced jax
+    value (dispatch only — caller syncs at the sample barrier), host plans
+    (storage) do the work inline and return ``None``.  Calling the plan is
+    the blocking contract older callers rely on: launch, sync, and return
+    the amount the plan actually emulates (quantized, so cache sharers
+    agree on what was consumed).
+    """
+
+    __slots__ = ("launch", "amount")
+
+    def __init__(self, launch: Callable[[], object], amount: float):
+        self.launch = launch
+        self.amount = float(amount)
+
+    def __call__(self) -> float:
+        token = self.launch()
+        if token is not None:
+            jax.block_until_ready(token)
+        return self.amount
+
+    @staticmethod
+    def noop() -> "Plan":
+        return Plan(lambda: None, 0.0)
+
+
 class PlanCache:
     """Shared, keyed memo of planned atom thunks (fleet emulation).
 
     Keys are the atom's full plan signature — (kind, backend/config knobs,
     quantized amount) — so identical (atom, amount) plans across a fleet of
     concurrently-replayed profiles are built, and their XLA programs traced,
-    exactly once.  The lock is held across the build so no plan is ever
-    constructed twice; the returned thunks are safe to execute concurrently
-    (jitted callables with read-only operands).
+    exactly once.  Builds hold a per-key guard, not the cache-wide lock:
+    concurrent fleet workers building *different* plans trace concurrently,
+    while a second worker asking for a key mid-build waits for the first
+    builder instead of constructing a duplicate.  The returned plans are
+    safe to execute concurrently (jitted callables with read-only operands).
     """
 
     def __init__(self):
         self._lock = threading.Lock()
-        self._plans: Dict[Tuple, Callable[[], float]] = {}
+        self._plans: Dict[Tuple, Plan] = {}
+        self._building: Dict[Tuple, threading.Event] = {}
         self.plans_built = 0
         self.hits = 0
 
     def get_or_build(self, key: Tuple,
-                     builder: Callable[[], Callable[[], float]]
-                     ) -> Callable[[], float]:
-        with self._lock:
-            plan = self._plans.get(key)
-            if plan is None:
+                     builder: Callable[[], Plan]) -> Plan:
+        while True:
+            with self._lock:
+                plan = self._plans.get(key)
+                if plan is not None:
+                    self.hits += 1
+                    return plan
+                done = self._building.get(key)
+                if done is None:
+                    done = threading.Event()
+                    self._building[key] = done
+                    owner = True
+                else:
+                    owner = False
+            if not owner:
+                # someone else is building this key: wait, then re-check
+                # (a failed build wakes us with no plan — we take over)
+                done.wait()
+                continue
+            try:
                 plan = builder()
+            except BaseException:
+                with self._lock:
+                    self._building.pop(key, None)
+                done.set()
+                raise
+            with self._lock:
                 self._plans[key] = plan
                 self.plans_built += 1
-            else:
-                self.hits += 1
+                self._building.pop(key, None)
+            done.set()
             return plan
 
     def __len__(self) -> int:
@@ -80,19 +136,41 @@ class Atom:
     resource = "abstract"
     cache: Optional[PlanCache] = None      # set by fleet-mode emulators
 
-    def plan(self, amount: float) -> Callable[[], float]:
-        """Returns a thunk that consumes ``amount`` and returns actual amount."""
+    def plan(self, amount: float) -> Plan:
+        """Returns a Plan that consumes ``amount`` (quantized) when called."""
         raise NotImplementedError
 
     def seconds(self, amount: float, hw: HardwareSpec) -> float:
         raise NotImplementedError
 
-    def _cached(self, key: Tuple,
-                builder: Callable[[], Callable[[], float]]
-                ) -> Callable[[], float]:
+    def _cached(self, key: Tuple, builder: Callable[[], Plan]) -> Plan:
         if self.cache is None:
             return builder()
         return self.cache.get_or_build(key, builder)
+
+
+def compute_burn_body(_, c):
+    """One compute-atom iteration: tile matmul kept bounded by tanh.
+    Shared with the fused schedule compiler so both paths burn
+    identically per iteration."""
+    return jnp.tanh(c @ c) * 0.5 + 0.5
+
+
+def compute_operand(tile: int):
+    """The burn loop's carry; shared with the schedule compiler so a fused
+    iteration costs exactly what an atom iteration costs."""
+    return jnp.eye(tile, dtype=jnp.float32) * 0.5
+
+
+def memory_stream_body(_, c):
+    """One memory-atom iteration: a full read+write pass over the block."""
+    return c * 1.0000001
+
+
+def memory_operand(block_bytes: int):
+    """The stream loop's carry (one block); shared with the schedule
+    compiler for the same reason as ``compute_operand``."""
+    return jnp.ones((block_bytes // 4,), jnp.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -114,9 +192,16 @@ class ComputeAtom(Atom):
         self.efficiency = max(efficiency, 1e-6)
         self.backend = backend
         self._fn: Optional[Callable] = None
+        self._fn_lock = threading.Lock()
 
     def _loop_fn(self):
         # iters is a traced argument: ONE compilation serves every sample.
+        # Guarded: per-key PlanCache builds run concurrently, and two
+        # distinct-key builders must still share one jitted program.
+        with self._fn_lock:
+            return self._loop_fn_locked()
+
+    def _loop_fn_locked(self):
         if self._fn is None:
             if self.backend == "pallas":
                 from repro.kernels.compute_atom import ops as catom_ops
@@ -128,35 +213,34 @@ class ComputeAtom(Atom):
                 self._fn = burn
             else:
                 def burn(x, iters):
-                    def body(_, c):
-                        return jnp.tanh(c @ c) * 0.5 + 0.5
-                    return jax.lax.fori_loop(0, iters, body, x)
+                    return jax.lax.fori_loop(0, iters, compute_burn_body, x)
                 self._fn = jax.jit(burn)
         return self._fn
 
     def flops_per_iter(self) -> float:
         return 2.0 * self.tile ** 3
 
-    def plan(self, flops: float) -> Callable[[], float]:
-        iters = max(int(round(flops / self.flops_per_iter()
-                              / self.efficiency)), 0)
+    def iters_for(self, flops: float) -> int:
+        """Quantize a raw flop amount into burn-loop iterations (the same
+        rounding the fused schedule compiler uses for its tables)."""
+        return max(int(round(flops / self.flops_per_iter()
+                             / self.efficiency)), 0)
+
+    def plan(self, flops: float) -> Plan:
+        iters = self.iters_for(flops)
         if iters == 0:
-            return lambda: 0.0
+            return Plan.noop()
         # Key on the quantized amount (iters), not the raw flops: amounts
-        # that round to the same loop count are the same plan, and the thunk
-        # reports the amount the plan actually emulates so sharers agree.
+        # that round to the same loop count are the same plan, and the plan
+        # reports the amount it actually emulates so sharers agree.
         key = ("compute", self.backend, self.tile, self.efficiency, iters)
         return self._cached(key, lambda: self._build_plan(iters))
 
-    def _build_plan(self, iters: int) -> Callable[[], float]:
+    def _build_plan(self, iters: int) -> Plan:
         fn = self._loop_fn()
-        x = jnp.eye(self.tile, dtype=jnp.float32) * 0.5
+        x = compute_operand(self.tile)
         emulated = iters * self.flops_per_iter() * self.efficiency
-
-        def run():
-            fn(x, iters).block_until_ready()
-            return emulated
-        return run
+        return Plan(lambda: fn(x, iters), emulated)
 
     def seconds(self, flops: float, hw: HardwareSpec) -> float:
         peak = hw.peak_flops * hw.flops_derate
@@ -176,8 +260,15 @@ class MemoryAtom(Atom):
         self.block_bytes = block_bytes
         self.backend = backend
         self._fns: Dict[int, Callable] = {}
+        self._fn_lock = threading.Lock()
 
     def _stream_fn(self):
+        # guarded like ComputeAtom._loop_fn: concurrent distinct-key plan
+        # builds must share one jitted program
+        with self._fn_lock:
+            return self._stream_fn_locked()
+
+    def _stream_fn_locked(self):
         if not self._fns:
             if self.backend == "pallas":
                 from repro.kernels.memory_atom import ops as matom_ops
@@ -189,28 +280,29 @@ class MemoryAtom(Atom):
                 self._fns[0] = stream
             else:
                 def stream(x, iters):
-                    def body(_, c):
-                        return c * 1.0000001
-                    return jax.lax.fori_loop(0, iters, body, x)
+                    return jax.lax.fori_loop(0, iters, memory_stream_body, x)
                 self._fns[0] = jax.jit(stream)
         return self._fns[0]
 
-    def plan(self, nbytes: float) -> Callable[[], float]:
-        per_iter = 2.0 * self.block_bytes          # read + write per pass
-        iters = max(int(round(nbytes / per_iter)), 0)
+    def bytes_per_iter(self) -> float:
+        return 2.0 * self.block_bytes              # read + write per pass
+
+    def iters_for(self, nbytes: float) -> int:
+        """Quantize a byte amount into stream-loop iterations (shared with
+        the fused schedule compiler's tables)."""
+        return max(int(round(nbytes / self.bytes_per_iter())), 0)
+
+    def plan(self, nbytes: float) -> Plan:
+        iters = self.iters_for(nbytes)
         if iters == 0:
-            return lambda: 0.0
+            return Plan.noop()
         key = ("memory", self.backend, self.block_bytes, iters)
-        return self._cached(key, lambda: self._build_plan(iters, per_iter))
+        return self._cached(key, lambda: self._build_plan(iters))
 
-    def _build_plan(self, iters: int, per_iter: float) -> Callable[[], float]:
+    def _build_plan(self, iters: int) -> Plan:
         fn = self._stream_fn()
-        x = jnp.ones((self.block_bytes // 4,), jnp.float32)
-
-        def run():
-            fn(x, iters).block_until_ready()
-            return iters * per_iter
-        return run
+        x = memory_operand(self.block_bytes)
+        return Plan(lambda: fn(x, iters), iters * self.bytes_per_iter())
 
     def seconds(self, nbytes: float, hw: HardwareSpec) -> float:
         bw = hw.hbm_bw * hw.hbm_derate
@@ -253,9 +345,9 @@ class CollectiveAtom(Atom):
             self._fns[n_elems] = jax.jit(fn)
         return self._fns[n_elems]
 
-    def plan(self, wire_bytes: float) -> Callable[[], float]:
+    def plan(self, wire_bytes: float) -> Plan:
         if self.mesh is None or wire_bytes <= 0:
-            return lambda: 0.0
+            return Plan.noop()
         n = self.mesh.shape[self.axis]
         # invert the ring model on the PER-CHIP shard:
         # wire/chip = factor * shard_bytes  (all-reduce: 2*(n-1)/n)
@@ -275,15 +367,10 @@ class CollectiveAtom(Atom):
         key = ("collective", self.kind, self.axis, mesh_id, n_elems)
         return self._cached(key, lambda: self._build_plan(n_elems, wire_bytes))
 
-    def _build_plan(self, n_elems: int, wire_bytes: float
-                    ) -> Callable[[], float]:
+    def _build_plan(self, n_elems: int, wire_bytes: float) -> Plan:
         fn = self._coll_fn(n_elems)
         x = jnp.ones((n_elems,), jnp.float32)
-
-        def run():
-            jax.block_until_ready(fn(x))
-            return wire_bytes
-        return run
+        return Plan(lambda: fn(x), wire_bytes)
 
     def seconds(self, wire_bytes: float, hw: HardwareSpec) -> float:
         bw = hw.ici_bw * hw.ici_derate
@@ -323,32 +410,45 @@ class StorageAtom(Atom):
             except OSError:
                 pass
 
-    def plan_write(self, nbytes: float) -> Callable[[], float]:
+    def plan_write(self, nbytes: float) -> Plan:
         blocks = max(int(nbytes // self.block_bytes), 0)
         if blocks == 0:
-            return lambda: 0.0
+            return Plan.noop()
         path = self._path()
 
-        def run():
+        def launch():
             with open(path, "wb") as f:
                 for _ in range(blocks):
                     f.write(self._buf)
                 f.flush()
                 os.fsync(f.fileno())
-            return blocks * self.block_bytes
-        return run
+            return None
+        return Plan(launch, blocks * self.block_bytes)
 
-    def plan_read(self, nbytes: float) -> Callable[[], float]:
+    def plan_read(self, nbytes: float, precreate: bool = True) -> Plan:
         blocks = max(int(nbytes // self.block_bytes), 0)
-        path = self._path()
         if blocks == 0:
-            return lambda: 0.0
+            return Plan.noop()
+        path = self._path()
+        # Populate the scratch file at *plan* time: the timed read leg must
+        # not pay a hidden write on first use (and an empty file would spin
+        # the wrap-around read loop forever).  Callers whose sample carries
+        # a write leg that runs first pass ``precreate=False`` — that write
+        # populates the file and plan-time bytes would be wasted I/O.
+        def populate():
+            with open(path, "wb") as f:
+                for _ in range(blocks):
+                    f.write(self._buf)
 
-        def run():
-            if not os.path.exists(path):
-                with open(path, "wb") as f:
-                    for _ in range(blocks):
-                        f.write(self._buf)
+        if precreate and (not os.path.exists(path)
+                          or os.path.getsize(path) == 0):
+            populate()
+
+        def launch():
+            # the scratch file can vanish between plan and launch (another
+            # replay's cleanup()); re-populate rather than fail the leg
+            if not os.path.exists(path) or os.path.getsize(path) == 0:
+                populate()
             done = 0
             with open(path, "rb") as f:
                 while done < blocks * self.block_bytes:
@@ -357,8 +457,8 @@ class StorageAtom(Atom):
                         f.seek(0)
                         continue
                     done += len(chunk)
-            return float(done)
-        return run
+            return None
+        return Plan(launch, blocks * self.block_bytes)
 
     def plan(self, nbytes: float):
         return self.plan_write(nbytes)

@@ -1,16 +1,33 @@
 """Sample-ordered emulation driver (paper §IV-B, §IV-D).
 
 Replays a SynapseProfile through the atoms: within one sample all resource
-types start together (storage on a worker thread, compute+memory on the
-accelerator stream); the next sample starts only when every consumption of
-the current sample finished.  Ordering across samples is the fidelity
-contract that implicitly preserves inter-resource dependencies; concurrency
-inside a sample may *speed up* emulation relative to the original serial
-execution, shrinking with finer sampling (paper Fig. 2) — the granularity
-experiment in benchmarks/ reproduces that effect.
+types start together (storage on a worker thread, compute+memory dispatched
+asynchronously on the accelerator stream with ONE sync at the sample
+barrier); the next sample starts only when every consumption of the current
+sample finished.  Ordering across samples is the fidelity contract that
+implicitly preserves inter-resource dependencies; concurrency inside a
+sample may *speed up* emulation relative to the original serial execution,
+shrinking with finer sampling (paper Fig. 2) — the granularity experiment
+in benchmarks/ reproduces that effect.
 
-Identical consecutive samples (a layer scan) are planned once and executed
-count times, so emulation compile cost is O(distinct samples).
+Two execution paths share that contract:
+
+  * **fused** (default, jnp backend): the schedule compiler
+    (``repro.core.schedule``) packs contiguous storage/collective-free runs
+    into iteration tables executed as ONE jitted ``lax.scan`` per segment,
+    so an M-sample profile costs O(storage-segment boundaries) device
+    dispatches instead of O(M × atoms); sample ordering is preserved inside
+    the scan.  Runs with storage or executable-collective legs replay
+    per-sample between segments (the I/O interleave is the point of the
+    barrier).  ``benchmarks/bench_dispatch.py`` measures the win.
+  * **per-sample** (``fused=False``, or pallas backends): one plan per atom
+    per collapsed run.  Identical consecutive samples (a layer scan) are
+    planned once and executed as a single scaled consumption, so compile
+    cost is O(distinct samples).
+
+Both paths consume the profile's resource vectors in the same order with
+the same count-scaling, so reported ``consumed`` totals are bit-identical
+(``tests/test_schedule.py`` pins this equivalence).
 """
 from __future__ import annotations
 
@@ -20,11 +37,15 @@ from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+import jax
+
 from repro.core.atoms import (CollectiveAtom, ComputeAtom, MemoryAtom,
                               PlanCache, StorageAtom)
 from repro.core.calibrate import HostCalibration, calibrate
 from repro.core.hardware import HardwareSpec
 from repro.core.metrics import ResourceVector, Sample, SynapseProfile
+from repro.core.schedule import (CompiledSchedule, FusedSegment,
+                                 SegmentRunner, compile_schedule)
 
 
 @dataclass
@@ -35,10 +56,13 @@ class EmulationReport:
     consumed: ResourceVector
     per_sample_s: List[float] = field(default_factory=list)
     planned: Optional[ResourceVector] = None
+    mode: str = "per_sample"             # "fused" | "per_sample"
+    n_dispatches: int = 0                # device dispatches issued
 
     def summary(self) -> Dict:
         return {"command": self.command, "ttc_s": self.ttc_s,
                 "n_samples": self.n_samples,
+                "mode": self.mode, "n_dispatches": self.n_dispatches,
                 "flops": self.consumed.flops,
                 "hbm_bytes": self.consumed.hbm_bytes,
                 "storage_write_bytes": self.consumed.storage_write_bytes}
@@ -46,7 +70,10 @@ class EmulationReport:
 
 @dataclass
 class FleetReport:
-    """Result of ``Emulator.emulate_many``: K profiles replayed concurrently."""
+    """Result of ``Emulator.emulate_many``: K profiles replayed concurrently.
+
+    ``max_workers`` is the *effective* pool size (requested workers capped
+    at the number of profiles, so tiny fleets don't spawn idle threads)."""
     reports: List[EmulationReport]
     wall_s: float                        # concurrent fleet wall time
     serial_s: float                      # sum of per-profile TTCs
@@ -94,6 +121,11 @@ class Emulator:
         self.speed = speed
         self.plan_cache = None
         self._fleet_lock = threading.Lock()
+        # Fused segments need table-driven loop counts, which the pallas
+        # atom kernels don't take; those backends fall back to per-sample.
+        self._fusable = backend == "jnp"
+        self._segments = SegmentRunner(tile=compute_tile,
+                                       block_bytes=mem_block)
         if plan_cache is not None:
             self.set_plan_cache(plan_cache)
 
@@ -105,6 +137,15 @@ class Emulator:
         self.memory.cache = cache
         if self.collective is not None:
             self.collective.cache = cache
+
+    def compile(self, profile: SynapseProfile, *, flops_scale: float = 1.0,
+                mem_scale: float = 1.0) -> CompiledSchedule:
+        """Lower a profile to its fused schedule (inspection / pre-warm)."""
+        return compile_schedule(_collapse(profile.samples),
+                                compute=self.compute, memory=self.memory,
+                                collective=self.collective,
+                                flops_scale=flops_scale,
+                                mem_scale=mem_scale, speed=self.speed)
 
     def _plan_sample(self, r: ResourceVector, flops_scale=1.0,
                      storage_scale=1.0, mem_scale=1.0):
@@ -121,66 +162,122 @@ class Emulator:
             storage_thunks.append(self.storage.plan_write(
                 r.storage_write_bytes * storage_scale / self.speed))
         if r.storage_read_bytes > 0:
+            # the write leg (if any) runs first on the I/O worker and
+            # populates the scratch file; plan-time pre-creation would be
+            # wasted bytes then
+            writes = storage_thunks and storage_thunks[0].amount > 0
             storage_thunks.append(self.storage.plan_read(
-                r.storage_read_bytes * storage_scale / self.speed))
+                r.storage_read_bytes * storage_scale / self.speed,
+                precreate=not writes))
         return thunks, storage_thunks
+
+    def _run_per_sample(self, r: ResourceVector, count: int, flops_scale,
+                        storage_scale, mem_scale, consumed, per_sample,
+                        verify: bool):
+        """Replay one collapsed run the per-sample way; returns the updated
+        consumed vector and the number of device dispatches issued.
+
+        Consecutive identical samples with no storage leg execute as a
+        single fused consumption (count × amounts): ordering semantics only
+        bind *distinct* samples, and per-dispatch overhead would otherwise
+        dominate fine-grained (per-layer) profiles.  Device thunks are
+        launched asynchronously and synced once at the sample barrier;
+        storage overlaps on the I/O worker thread.
+        """
+        fuse = count > 1 and r.storage_read_bytes == 0 and \
+            r.storage_write_bytes == 0
+        reps = 1 if fuse else count
+        rr = r.scale(count) if fuse else r
+        thunks, storage_thunks = self._plan_sample(
+            rr, flops_scale, storage_scale, mem_scale)
+        dispatches = 0
+        for _ in range(reps):
+            t0 = time.perf_counter()
+
+            def io_worker():
+                for t in storage_thunks:
+                    t()
+
+            th = None
+            if storage_thunks:
+                th = threading.Thread(target=io_worker)
+                th.start()
+            tokens = [t.launch() for t in thunks]   # async device dispatch
+            tokens = [tok for tok in tokens if tok is not None]
+            dispatches += len(tokens)               # noop plans don't count
+            if tokens:
+                jax.block_until_ready(tokens)       # one sync per sample
+            if th is not None:
+                th.join()
+            per_sample.append(time.perf_counter() - t0)
+            if verify:
+                consumed = consumed.add(rr)
+        return consumed, dispatches
 
     def emulate(self, profile: SynapseProfile, *, flops_scale: float = 1.0,
                 storage_scale: float = 1.0, mem_scale: float = 1.0,
-                verify: bool = True) -> EmulationReport:
+                verify: bool = True, fused: bool = True) -> EmulationReport:
         runs = _collapse(profile.samples)
+        use_fused = fused and self._fusable
         consumed = ResourceVector()
-        per_sample = []
+        per_sample: List[float] = []
+        dispatches = 0
         t_start = time.perf_counter()
-        for r, count in runs:
-            # Consecutive identical samples with no storage leg execute as a
-            # single fused consumption (count × amounts): ordering semantics
-            # only bind *distinct* samples, and per-dispatch overhead would
-            # otherwise dominate fine-grained (per-layer) profiles.
-            fuse = count > 1 and r.storage_read_bytes == 0 and \
-                r.storage_write_bytes == 0
-            reps = 1 if fuse else count
-            rr = r.scale(count) if fuse else r
-            thunks, storage_thunks = self._plan_sample(
-                rr, flops_scale, storage_scale, mem_scale)
-            for _ in range(reps):
-                t0 = time.perf_counter()
-                results = {}
-
-                def io_worker():
-                    results["io"] = sum(t() for t in storage_thunks)
-
-                th = None
-                if storage_thunks:
-                    th = threading.Thread(target=io_worker)
-                    th.start()
-                for t in thunks:        # device-side consumptions
-                    t()
-                if th is not None:
-                    th.join()
-                per_sample.append(time.perf_counter() - t0)
-                if verify:
-                    consumed = consumed.add(rr)
+        if use_fused:
+            sched = compile_schedule(runs, compute=self.compute,
+                                     memory=self.memory,
+                                     collective=self.collective,
+                                     flops_scale=flops_scale,
+                                     mem_scale=mem_scale, speed=self.speed)
+            for step in sched.steps:
+                if isinstance(step, FusedSegment):
+                    t0 = time.perf_counter()
+                    dispatched = self._segments.run(step)  # ONE dispatch+sync
+                    dt = time.perf_counter() - t0
+                    dispatches += int(dispatched)
+                    # apportion the segment's wall time across its rows so
+                    # per_sample_s keeps one entry per executed sample
+                    per_sample.extend([dt / step.n_rows] * step.n_rows)
+                    if verify:
+                        for rr in step.rows:
+                            consumed = consumed.add(rr)
+                else:
+                    consumed, d = self._run_per_sample(
+                        step.resources, step.count, flops_scale,
+                        storage_scale, mem_scale, consumed, per_sample,
+                        verify)
+                    dispatches += d
+        else:
+            for r, count in runs:
+                consumed, d = self._run_per_sample(
+                    r, count, flops_scale, storage_scale, mem_scale,
+                    consumed, per_sample, verify)
+                dispatches += d
         ttc = time.perf_counter() - t_start
         return EmulationReport(command=profile.command, ttc_s=ttc,
                                n_samples=len(per_sample), consumed=consumed,
                                per_sample_s=per_sample,
-                               planned=profile.totals)
+                               planned=profile.totals,
+                               mode="fused" if use_fused else "per_sample",
+                               n_dispatches=dispatches)
 
     def emulate_many(self, profiles: List[SynapseProfile], *,
                      max_workers: int = 4, flops_scale: float = 1.0,
                      storage_scale: float = 1.0, mem_scale: float = 1.0,
-                     verify: bool = True) -> FleetReport:
+                     verify: bool = True, fused: bool = True) -> FleetReport:
         """Fleet mode: replay many profiles concurrently on worker threads.
 
         Each profile replays on exactly one worker, so the per-profile
         sample-ordering contract is intact; ordering *across* profiles is
         deliberately unconstrained (a fleet has no inter-profile
         dependencies).  All workers share this emulator's atoms through a
-        keyed plan cache, so identical (atom, amount) plans are built — and
-        their XLA programs traced — once for the whole fleet instead of once
-        per profile.
+        keyed plan cache — identical (atom, amount) plans are built, and
+        their XLA programs traced, once for the whole fleet instead of once
+        per profile — and share the SegmentRunner's fused programs the same
+        way.  The pool is capped at ``len(profiles)`` so tiny fleets don't
+        spawn idle threads.
         """
+        workers = max(1, min(max_workers, len(profiles)))
         # One fleet at a time per emulator: the atoms, ephemeral cache
         # attach/detach and scratch-file cleanup are instance state.
         with self._fleet_lock:
@@ -196,12 +293,12 @@ class Emulator:
             before = cache.stats()
             try:
                 t0 = time.perf_counter()
-                with ThreadPoolExecutor(
-                        max_workers=max(max_workers, 1)) as pool:
+                with ThreadPoolExecutor(max_workers=workers) as pool:
                     futures = [pool.submit(self.emulate, p,
                                            flops_scale=flops_scale,
                                            storage_scale=storage_scale,
-                                           mem_scale=mem_scale, verify=verify)
+                                           mem_scale=mem_scale, verify=verify,
+                                           fused=fused)
                                for p in profiles]
                     reports = [f.result() for f in futures]
                 wall = time.perf_counter() - t0
@@ -216,7 +313,7 @@ class Emulator:
             stats["size"] = after["size"]
         return FleetReport(reports=reports, wall_s=wall,
                            serial_s=sum(r.ttc_s for r in reports),
-                           max_workers=max_workers,
+                           max_workers=workers,
                            cache_stats=stats)
 
 

@@ -1,0 +1,241 @@
+"""Fused schedule compiler: whole-profile emulation in O(segments) dispatches.
+
+The per-sample replay loop pays one Python→XLA round trip per atom per
+sample with a blocking sync inside every thunk — the dispatch-overhead trap
+that dominates emulation cost at fine granularity (paper §IV-B, Fig. 2:
+fidelity wants *finer* samples, the old loop made them *more* expensive).
+This module lowers a collapsed run list into a small number of fused device
+programs instead:
+
+  * contiguous **storage-free, collective-free** runs are packed into a
+    ``FusedSegment``: an int32 iteration table with one row per run
+    (compute-burn iters, memory-stream iters), quantized exactly like the
+    atoms quantize (``ComputeAtom.iters_for`` / ``MemoryAtom.iters_for``,
+    applied to the count-scaled run amounts).  A segment executes as ONE
+    jitted ``lax.scan`` over its table — the scan carries the compute tile
+    and memory block through every row in order, so the cross-sample
+    ordering contract holds *inside* the program and an M-sample profile
+    costs O(storage-segment boundaries) dispatches instead of O(M × atoms).
+  * runs with a storage leg (host I/O worker interleave) or an executable
+    collective (bound to its mesh via shard_map) stay ``BarrierStep``s and
+    replay through the legacy per-sample path, splitting the segments
+    around them — exactly where the ordering contract demands a real
+    barrier.
+
+Tables are padded to power-of-two lengths with (0, 0) no-op rows, so one
+``SegmentRunner`` compiles at most O(log max-segment-length) programs per
+(tile, block) configuration and every segment of a profile — and of every
+profile in a fleet sharing the runner — reuses them.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, List, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.atoms import (ComputeAtom, MemoryAtom, compute_burn_body,
+                              compute_operand, memory_operand,
+                              memory_stream_body)
+from repro.core.metrics import ResourceVector
+
+
+@dataclass
+class FusedSegment:
+    """Contiguous storage/collective-free runs packed into one dispatch.
+
+    ``table`` row i holds (compute_iters, memory_iters) for the i-th run;
+    ``rows`` holds the matching consumed ``ResourceVector`` per run, already
+    count-scaled, in profile order (the emulator adds them in sequence so
+    consumed totals are bit-identical to the per-sample path).
+    """
+    table: np.ndarray                     # (n_rows, 2) int32
+    rows: List[ResourceVector] = field(default_factory=list)
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.table.shape[0])
+
+    @property
+    def compute_iters(self) -> int:
+        return int(self.table[:, 0].sum())
+
+    @property
+    def memory_iters(self) -> int:
+        return int(self.table[:, 1].sum())
+
+
+@dataclass
+class BarrierStep:
+    """A collapsed run the fused path must replay per-sample: it carries a
+    storage leg (I/O worker interleave) or an executable collective."""
+    resources: ResourceVector
+    count: int = 1
+
+
+ScheduleStep = Union[FusedSegment, BarrierStep]
+
+
+@dataclass
+class CompiledSchedule:
+    """A profile lowered to fused segments split by barrier steps."""
+    steps: List[ScheduleStep] = field(default_factory=list)
+
+    @property
+    def segments(self) -> List[FusedSegment]:
+        return [s for s in self.steps if isinstance(s, FusedSegment)]
+
+    @property
+    def barriers(self) -> List[BarrierStep]:
+        return [s for s in self.steps if isinstance(s, BarrierStep)]
+
+    @property
+    def n_rows(self) -> int:
+        return sum(s.n_rows for s in self.segments)
+
+    def describe(self) -> Dict[str, int]:
+        return {"n_steps": len(self.steps),
+                "n_segments": len(self.segments),
+                "n_barriers": len(self.barriers),
+                "n_rows": self.n_rows,
+                "compute_iters": sum(s.compute_iters for s in self.segments),
+                "memory_iters": sum(s.memory_iters for s in self.segments)}
+
+
+def compile_schedule(runs, *, compute: ComputeAtom, memory: MemoryAtom,
+                     collective=None, flops_scale: float = 1.0,
+                     mem_scale: float = 1.0, speed: float = 1.0
+                     ) -> CompiledSchedule:
+    """Lower collapsed (ResourceVector, count) runs into a CompiledSchedule.
+
+    Quantization mirrors the per-sample path exactly: a run is scaled by its
+    count first (the legacy fuse semantics for identical consecutive
+    samples), then each amount is scaled and quantized by the owning atom's
+    ``iters_for``.  Amounts below one iteration lower to a no-op row, same
+    as the atoms' zero-iteration plans.
+    """
+    steps: List[ScheduleStep] = []
+    table_rows: List = []
+    vecs: List[ResourceVector] = []
+
+    def flush():
+        if table_rows:
+            steps.append(FusedSegment(
+                table=np.asarray(table_rows, dtype=np.int32).reshape(-1, 2),
+                rows=list(vecs)))
+            table_rows.clear()
+            vecs.clear()
+
+    for r, count in runs:
+        has_storage = (r.storage_read_bytes > 0 or r.storage_write_bytes > 0)
+        has_collective = collective is not None and r.ici_total > 0
+        if has_storage or has_collective:
+            flush()
+            steps.append(BarrierStep(resources=r, count=count))
+            continue
+        rr = r.scale(count) if count > 1 else r
+        ci = compute.iters_for(rr.flops * flops_scale / speed) \
+            if rr.flops > 0 else 0
+        mi = memory.iters_for(rr.hbm_bytes * mem_scale / speed) \
+            if rr.hbm_bytes > 0 else 0
+        table_rows.append((ci, mi))
+        vecs.append(rr)
+    flush()
+    return CompiledSchedule(steps=steps)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+class SegmentRunner:
+    """Executes FusedSegment iteration tables, one device dispatch each.
+
+    Programs are specialized to the carries a segment actually needs —
+    a compute-only segment must not drag the (potentially tens-of-MB)
+    memory block through its scan, matching the per-sample path where a
+    zero-iteration amount plans to a noop.  One program per (padded
+    length, needs-compute, needs-memory); safe to share across fleet
+    worker threads: the program dict and operand init are guarded, jitted
+    callables are thread-safe, and operands are read-only.
+    """
+
+    def __init__(self, tile: int = 256, block_bytes: int = 1 << 24):
+        self.tile = tile
+        self.block_bytes = block_bytes
+        self._fns: Dict[tuple, object] = {}
+        self._lock = threading.Lock()
+        self._xc = None
+        self._xm = None
+
+    def _operands(self):
+        if self._xm is None:
+            with self._lock:
+                if self._xm is None:
+                    # atom-shared constructors: a fused iteration must cost
+                    # exactly what an atom iteration costs.  _xm is the
+                    # publish flag — it is assigned last, so a racing reader
+                    # never sees one operand without the other.
+                    self._xc = compute_operand(self.tile)
+                    self._xm = memory_operand(self.block_bytes)
+        return self._xc, self._xm
+
+    def _fn(self, padded_len: int, with_c: bool, with_m: bool):
+        key = (padded_len, with_c, with_m)
+        fn = self._fns.get(key)
+        if fn is None:
+            with self._lock:
+                fn = self._fns.get(key)
+                if fn is None:
+                    def segment(carry, table):
+                        def body(carry, row):
+                            if with_c and with_m:
+                                c, m = carry
+                                c = jax.lax.fori_loop(0, row[0],
+                                                      compute_burn_body, c)
+                                m = jax.lax.fori_loop(0, row[1],
+                                                      memory_stream_body, m)
+                                return (c, m), jnp.int32(0)
+                            if with_c:
+                                return jax.lax.fori_loop(
+                                    0, row[0], compute_burn_body,
+                                    carry), jnp.int32(0)
+                            return jax.lax.fori_loop(
+                                0, row[1], memory_stream_body,
+                                carry), jnp.int32(0)
+                        out, _ = jax.lax.scan(body, carry, table)
+                        return out
+                    fn = jax.jit(segment)
+                    self._fns[key] = fn
+        return fn
+
+    @property
+    def n_programs(self) -> int:
+        return len(self._fns)
+
+    def launch(self, segment: FusedSegment):
+        """Dispatch the whole segment asynchronously; returns the unsynced
+        carry (sync with ``jax.block_until_ready``), or ``None`` when every
+        row quantized to zero iterations (nothing to dispatch)."""
+        with_c = segment.compute_iters > 0
+        with_m = segment.memory_iters > 0
+        if not (with_c or with_m):
+            return None
+        padded = _next_pow2(segment.n_rows)
+        table = np.zeros((padded, 2), dtype=np.int32)
+        table[:segment.n_rows] = segment.table
+        xc, xm = self._operands()
+        carry = (xc, xm) if (with_c and with_m) else (xc if with_c else xm)
+        return self._fn(padded, with_c, with_m)(carry, table)
+
+    def run(self, segment: FusedSegment) -> bool:
+        """Dispatch and sync: the segment's samples are done on return.
+        Returns False when the segment was all-noop (no dispatch issued)."""
+        token = self.launch(segment)
+        if token is None:
+            return False
+        jax.block_until_ready(token)
+        return True

@@ -45,15 +45,17 @@ class ScenarioResult:
 def run_scenario(name: str, *, store: Optional[ProfileStore] = None,
                  specs: Optional[Sequence[HardwareSpec]] = None,
                  emulator: Optional[Emulator] = None, emulate: bool = True,
-                 **params) -> ScenarioResult:
+                 fused: bool = True, **params) -> ScenarioResult:
     """Generate one scenario, predict it across hardware, emulate it here,
-    and (optionally) persist it under its scenario tags."""
+    and (optionally) persist it under its scenario tags.  ``fused`` selects
+    the schedule-compiler replay path (O(segments) dispatches); pass False
+    to force the legacy per-sample loop."""
     profile = generate(name, **params)
     predictions = compare(profile, list(specs or DEFAULT_SPECS))
     profile.meta["predictions"] = predictions    # persisted with the profile
     report = None
     if emulate:
-        report = (emulator or Emulator()).emulate(profile)
+        report = (emulator or Emulator()).emulate(profile, fused=fused)
         profile.meta["emulated_ttc_s"] = report.ttc_s
     run_id = store.add(profile) if store is not None else None
     return ScenarioResult(name=name, profile=profile, predictions=predictions,
@@ -71,7 +73,7 @@ def run_fleet(jobs: Sequence[Tuple[str, Dict]], *,
               store: Optional[ProfileStore] = None,
               hw: HardwareSpec = TPU_V5E,
               emulator: Optional[Emulator] = None,
-              max_workers: int = 4) -> FleetResult:
+              max_workers: int = 4, fused: bool = True) -> FleetResult:
     """Synthesize a fleet of scenarios and replay it concurrently.
 
     ``jobs`` is a sequence of (scenario_name, params) pairs.  Profiles are
@@ -84,7 +86,7 @@ def run_fleet(jobs: Sequence[Tuple[str, Dict]], *,
                for name, params in jobs]
     em = emulator or Emulator()
     fleet = em.emulate_many([r.profile for r in results],
-                            max_workers=max_workers)
+                            max_workers=max_workers, fused=fused)
     for r, rep in zip(results, fleet.reports):
         r.report = rep
         r.profile.meta["emulated_ttc_s"] = rep.ttc_s
