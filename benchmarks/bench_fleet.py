@@ -1,0 +1,116 @@
+"""Fleet executor benchmark: thread vs process fleet, cold vs warm workers.
+
+Replays the same mixed fleet three ways and reports where the process
+executor's costs live:
+
+  * ``thread_wall_s``   — in-process thread fleet (the PR 1/2 baseline),
+                          warm plan cache and segment programs;
+  * ``process_cold_s``  — first ``ProcessFleet.run`` after spawn: each
+                          worker traces its fused programs once (worker
+                          spawn + jax import time is reported separately
+                          as ``spawn_s``);
+  * ``process_warm_s``  — the same pool again: pure replay + IPC, the
+                          steady-state cost a long-lived fleet pays.
+
+The regression guards are deliberately loose — this container's wall-clock
+ratios swing ~2x run-to-run (see bench_dispatch) — and the hard assert is
+correctness, which is noise-free: every process-fleet report must consume
+totals bit-identical to the in-process replay.  The warm-pool guard
+catches the failure mode that matters architecturally: workers re-tracing
+per bundle instead of once per process would push warm replay toward cold
+time and far past the bound.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.core import Emulator, PlanCache
+from repro.fleet import ProcessFleet, WorkerSpec, bundle_profile
+from repro.scenarios import generate
+
+WORKERS = 2
+
+
+def fleet_profiles(k: int):
+    """A mixed fleet: scan steps + checkpoints, request traffic, stragglers."""
+    kinds = [
+        lambda i: generate("training_scan", n_steps=8, ckpt_every=4,
+                           flops_per_step=4e7, hbm_per_step=3.4e7,
+                           ckpt_bytes=1 << 20),
+        lambda i: generate("serving_traffic", n_requests=6, n_params=2e6,
+                           prefill_tokens=64, decode_tokens=8, seed=i),
+        lambda i: generate("fanout_straggler", n_workers=4, work_flops=5e7,
+                           work_hbm=4e7, jitter=0.0, seed=i),
+    ]
+    return [kinds[i % len(kinds)](i) for i in range(k)]
+
+
+def main(fast: bool = False):
+    k = 4 if fast else 8
+    reps = 3
+    profiles = fleet_profiles(k)
+    em = Emulator(plan_cache=PlanCache())
+
+    em.emulate_many(profiles, max_workers=WORKERS)          # warm in-process
+    thread_fleet = None
+    thread_s = float("inf")
+    for _ in range(reps):
+        f = em.emulate_many(profiles, max_workers=WORKERS)
+        if f.wall_s < thread_s:
+            thread_s, thread_fleet = f.wall_s, f
+
+    bundles = [bundle_profile(em, p) for p in profiles]
+    t0 = time.perf_counter()
+    fleet = ProcessFleet(WORKERS, WorkerSpec(emulator=em.spec()))
+    try:
+        fleet.warmup()
+        spawn_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        cold_reports = fleet.run(bundles)
+        cold_s = time.perf_counter() - t0
+
+        warm_s = float("inf")
+        warm_reports = cold_reports
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            r = fleet.run(bundles)
+            dt = time.perf_counter() - t0
+            if dt < warm_s:
+                warm_s, warm_reports = dt, r
+    finally:
+        fleet.close()
+    em.storage.cleanup()
+
+    identical = all(
+        pr.consumed == tr.consumed and pr.n_samples == tr.n_samples
+        for pr, tr in zip(warm_reports, thread_fleet.reports))
+    rows = [{
+        "k_profiles": k,
+        "workers": WORKERS,
+        "thread_wall_s": thread_s,
+        "spawn_s": spawn_s,
+        "process_cold_s": cold_s,
+        "process_warm_s": warm_s,
+        "warm_vs_thread": warm_s / thread_s if thread_s else 0.0,
+        "cold_vs_warm": cold_s / warm_s if warm_s else 0.0,
+        "worker_deaths": fleet.worker_deaths,
+        "consumed_identical": identical,
+    }]
+    emit("fleet", rows)
+    assert identical, \
+        "process-fleet totals must be bit-identical to in-process replay"
+    # Loose guards only (2x run-to-run noise): warm process replay must be
+    # in the same decade as the thread fleet — re-tracing per bundle would
+    # be orders of magnitude off — and an absolute floor keeps tiny fast
+    # runs from tripping on IPC constants.
+    bound = max(5.0 * thread_s, 2.0)
+    assert warm_s <= bound, \
+        f"warm process fleet {warm_s:.3f}s vs bound {bound:.3f}s " \
+        f"(thread fleet {thread_s:.3f}s) — are workers re-tracing per bundle?"
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,7 @@ def main() -> None:
 
     from benchmarks import (bench_atoms, bench_dispatch,
                             bench_emulation_portability,
-                            bench_emulation_same_host,
+                            bench_emulation_same_host, bench_fleet,
                             bench_profiling_consistency,
                             bench_profiling_overhead, bench_roofline,
                             bench_scenarios)
@@ -30,6 +30,7 @@ def main() -> None:
         ("emulation_portability", bench_emulation_portability.main),
         ("roofline", bench_roofline.main),
         ("scenarios", bench_scenarios.main),
+        ("fleet", bench_fleet.main),
     ]
     for name, fn in suite:
         if args.only and args.only not in name:

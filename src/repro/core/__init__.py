@@ -5,14 +5,16 @@ profile once (static watcher over compiled HLO, or runtime /proc watchers)
 -> emulate anywhere (resource atoms on any host/mesh)
 -> predict TTC on hardware you don't have (roofline terms per sample).
 """
-from repro.core.atoms import (CollectiveAtom, ComputeAtom, MemoryAtom,  # noqa
-                              Plan, PlanCache, StorageAtom)
+from repro.core.atoms import (CollectiveAtom, CollectiveSpec,  # noqa
+                              ComputeAtom, ComputeSpec, MemoryAtom,
+                              MemorySpec, Plan, PlanCache, StorageAtom,
+                              StorageSpec)
 from repro.core.calibrate import HostCalibration, calibrate  # noqa
 from repro.core.emulator import (EmulationReport, Emulator,  # noqa
-                                 FleetReport)
+                                 EmulatorSpec, FleetReport)
 from repro.core.schedule import (BarrierStep, CompiledSchedule,  # noqa
                                  FusedSegment, SegmentRunner,
-                                 compile_schedule)
+                                 compile_schedule, rehydrate_schedule)
 from repro.core.hardware import (HOST_ARCHER_NODE, HOST_I7_M620,  # noqa
                                  HOST_STAMPEDE_NODE, TPU_V5E, TPU_V5E_2POD,
                                  TPU_V5E_POD, HardwareSpec, get_spec)

@@ -132,6 +132,52 @@ class PlanCache:
                 "size": len(self._plans)}
 
 
+# ---------------------------------------------------------------------------
+# Picklable atom configs: the knob surface of an atom, detached from its
+# live state (calibration, jitted programs, meshes, scratch buffers).  A
+# spec crosses a process boundary and ``build()``s a fresh atom on the far
+# side — fleet workers receive these instead of atoms.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ComputeSpec:
+    tile: int = 256
+    efficiency: float = 1.0
+    backend: str = "jnp"
+
+    def build(self, calib=None) -> "ComputeAtom":
+        return ComputeAtom(calib, tile=self.tile, efficiency=self.efficiency,
+                           backend=self.backend)
+
+
+@dataclass(frozen=True)
+class MemorySpec:
+    block_bytes: int = 1 << 24
+    backend: str = "jnp"
+
+    def build(self, calib=None) -> "MemoryAtom":
+        return MemoryAtom(calib, block_bytes=self.block_bytes,
+                          backend=self.backend)
+
+
+@dataclass(frozen=True)
+class StorageSpec:
+    block_bytes: int = 1 << 20
+    # no directory: scratch files belong to the host the atom runs on
+
+    def build(self, calib=None) -> "StorageAtom":
+        return StorageAtom(calib, block_bytes=self.block_bytes)
+
+
+@dataclass(frozen=True)
+class CollectiveSpec:
+    axis: Optional[str] = None           # None: the mesh's last axis
+    kind: str = "all-reduce"
+
+    def build(self, mesh) -> "CollectiveAtom":
+        return CollectiveAtom(mesh, axis=self.axis, kind=self.kind)
+
+
 class Atom:
     resource = "abstract"
     cache: Optional[PlanCache] = None      # set by fleet-mode emulators
@@ -217,6 +263,10 @@ class ComputeAtom(Atom):
                 self._fn = jax.jit(burn)
         return self._fn
 
+    def spec(self) -> ComputeSpec:
+        return ComputeSpec(tile=self.tile, efficiency=self.efficiency,
+                           backend=self.backend)
+
     def flops_per_iter(self) -> float:
         return 2.0 * self.tile ** 3
 
@@ -284,6 +334,9 @@ class MemoryAtom(Atom):
                 self._fns[0] = jax.jit(stream)
         return self._fns[0]
 
+    def spec(self) -> MemorySpec:
+        return MemorySpec(block_bytes=self.block_bytes, backend=self.backend)
+
     def bytes_per_iter(self) -> float:
         return 2.0 * self.block_bytes              # read + write per pass
 
@@ -322,6 +375,9 @@ class CollectiveAtom(Atom):
         self.axis = axis or (mesh.axis_names[-1] if mesh is not None else None)
         self.kind = kind
         self._fns: Dict[int, Callable] = {}
+
+    def spec(self) -> CollectiveSpec:
+        return CollectiveSpec(axis=self.axis, kind=self.kind)
 
     def _coll_fn(self, n_elems: int):
         if n_elems not in self._fns:
@@ -391,6 +447,9 @@ class StorageAtom(Atom):
         self.dir = directory or tempfile.gettempdir()
         self._buf = os.urandom(block_bytes)
         self._paths: set = set()
+
+    def spec(self) -> StorageSpec:
+        return StorageSpec(block_bytes=self.block_bytes)
 
     def _path(self) -> str:
         # Keyed by planning thread so concurrent fleet workers never write

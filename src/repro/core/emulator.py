@@ -39,8 +39,9 @@ from typing import Dict, List, Optional
 
 import jax
 
-from repro.core.atoms import (CollectiveAtom, ComputeAtom, MemoryAtom,
-                              PlanCache, StorageAtom)
+from repro.core.atoms import (CollectiveAtom, CollectiveSpec, ComputeAtom,
+                              ComputeSpec, MemoryAtom, MemorySpec, PlanCache,
+                              StorageAtom, StorageSpec)
 from repro.core.calibrate import HostCalibration, calibrate
 from repro.core.hardware import HardwareSpec
 from repro.core.metrics import ResourceVector, Sample, SynapseProfile
@@ -58,13 +59,17 @@ class EmulationReport:
     planned: Optional[ResourceVector] = None
     mode: str = "per_sample"             # "fused" | "per_sample"
     n_dispatches: int = 0                # device dispatches issued
+    n_collective_dispatches: int = 0     # of which executable collectives
 
     def summary(self) -> Dict:
         return {"command": self.command, "ttc_s": self.ttc_s,
                 "n_samples": self.n_samples,
                 "mode": self.mode, "n_dispatches": self.n_dispatches,
+                "n_collective_dispatches": self.n_collective_dispatches,
                 "flops": self.consumed.flops,
                 "hbm_bytes": self.consumed.hbm_bytes,
+                "ici_bytes": self.consumed.ici_total,
+                "storage_read_bytes": self.consumed.storage_read_bytes,
                 "storage_write_bytes": self.consumed.storage_write_bytes}
 
 
@@ -97,6 +102,35 @@ class FleetReport:
         return {"n_profiles": self.n_profiles, "wall_s": self.wall_s,
                 "serial_s": self.serial_s, "speedup": self.speedup,
                 "max_workers": self.max_workers, **self.cache_stats}
+
+
+@dataclass(frozen=True)
+class EmulatorSpec:
+    """Picklable recipe for an ``Emulator``: calibration + atom configs.
+
+    ``build()`` reconstructs an equivalent emulator anywhere — same
+    quantization (tile/block sizes), same efficiency/speed knobs, and the
+    *parent's* host calibration, so fleet workers neither re-calibrate nor
+    drift from the emulator that compiled their schedules.  ``mesh`` (a live
+    jax Mesh, built on the destination from its own devices) attaches a
+    CollectiveAtom per the collective spec.
+    """
+    calib: HostCalibration
+    compute: ComputeSpec = ComputeSpec()
+    memory: MemorySpec = MemorySpec()
+    storage: StorageSpec = StorageSpec()
+    collective: Optional[CollectiveSpec] = None
+    speed: float = 1.0
+
+    def build(self, mesh=None) -> "Emulator":
+        em = Emulator(calib=self.calib, backend=self.compute.backend,
+                      compute_tile=self.compute.tile,
+                      mem_block=self.memory.block_bytes,
+                      storage_block=self.storage.block_bytes,
+                      efficiency=self.compute.efficiency, speed=self.speed)
+        if mesh is not None:
+            em.collective = (self.collective or CollectiveSpec()).build(mesh)
+        return em
 
 
 class Emulator:
@@ -138,25 +172,43 @@ class Emulator:
         if self.collective is not None:
             self.collective.cache = cache
 
+    def spec(self) -> EmulatorSpec:
+        """This emulator's picklable recipe (see ``EmulatorSpec``)."""
+        return EmulatorSpec(
+            calib=self.calib, compute=self.compute.spec(),
+            memory=self.memory.spec(), storage=self.storage.spec(),
+            collective=(self.collective.spec()
+                        if self.collective is not None else None),
+            speed=self.speed)
+
     def compile(self, profile: SynapseProfile, *, flops_scale: float = 1.0,
-                mem_scale: float = 1.0) -> CompiledSchedule:
-        """Lower a profile to its fused schedule (inspection / pre-warm)."""
+                mem_scale: float = 1.0,
+                keep_collectives: Optional[bool] = None) -> CompiledSchedule:
+        """Lower a profile to its fused schedule (inspection / pre-warm /
+        detach-and-ship).  ``keep_collectives=True`` lowers wire-byte runs
+        to barrier steps even without a local mesh — for schedules shipped
+        to fleet workers that own one."""
         return compile_schedule(_collapse(profile.samples),
                                 compute=self.compute, memory=self.memory,
                                 collective=self.collective,
                                 flops_scale=flops_scale,
-                                mem_scale=mem_scale, speed=self.speed)
+                                mem_scale=mem_scale, speed=self.speed,
+                                keep_collectives=keep_collectives)
 
     def _plan_sample(self, r: ResourceVector, flops_scale=1.0,
                      storage_scale=1.0, mem_scale=1.0):
+        """Plan one sample's device legs as (resource kind, Plan) pairs plus
+        its host-side storage plans."""
         thunks = []
         if r.flops > 0:
-            thunks.append(self.compute.plan(r.flops * flops_scale / self.speed))
+            thunks.append(("flops",
+                           self.compute.plan(r.flops * flops_scale / self.speed)))
         if r.hbm_bytes > 0:
-            thunks.append(self.memory.plan(r.hbm_bytes * mem_scale / self.speed))
+            thunks.append(("hbm",
+                           self.memory.plan(r.hbm_bytes * mem_scale / self.speed)))
         wire = r.ici_total
         if wire > 0 and self.collective is not None:
-            thunks.append(self.collective.plan(wire / self.speed))
+            thunks.append(("ici", self.collective.plan(wire / self.speed)))
         storage_thunks = []
         if r.storage_write_bytes > 0:
             storage_thunks.append(self.storage.plan_write(
@@ -175,7 +227,8 @@ class Emulator:
                         storage_scale, mem_scale, consumed, per_sample,
                         verify: bool):
         """Replay one collapsed run the per-sample way; returns the updated
-        consumed vector and the number of device dispatches issued.
+        consumed vector, the number of device dispatches issued, and how
+        many of those were executable collectives.
 
         Consecutive identical samples with no storage leg execute as a
         single fused consumption (count × amounts): ordering semantics only
@@ -191,6 +244,7 @@ class Emulator:
         thunks, storage_thunks = self._plan_sample(
             rr, flops_scale, storage_scale, mem_scale)
         dispatches = 0
+        coll_dispatches = 0
         for _ in range(reps):
             t0 = time.perf_counter()
 
@@ -202,9 +256,13 @@ class Emulator:
             if storage_thunks:
                 th = threading.Thread(target=io_worker)
                 th.start()
-            tokens = [t.launch() for t in thunks]   # async device dispatch
-            tokens = [tok for tok in tokens if tok is not None]
-            dispatches += len(tokens)               # noop plans don't count
+            tokens = []
+            for kind, t in thunks:                  # async device dispatch
+                tok = t.launch()
+                if tok is not None:                 # noop plans don't count
+                    tokens.append(tok)
+                    coll_dispatches += kind == "ici"
+            dispatches += len(tokens)
             if tokens:
                 jax.block_until_ready(tokens)       # one sync per sample
             if th is not None:
@@ -212,16 +270,59 @@ class Emulator:
             per_sample.append(time.perf_counter() - t0)
             if verify:
                 consumed = consumed.add(rr)
-        return consumed, dispatches
+        return consumed, dispatches, coll_dispatches
+
+    def replay(self, sched: CompiledSchedule, *, command: str = "",
+               planned: Optional[ResourceVector] = None,
+               flops_scale: float = 1.0, storage_scale: float = 1.0,
+               mem_scale: float = 1.0, verify: bool = True
+               ) -> EmulationReport:
+        """Execute an already-compiled schedule (fused path).
+
+        This is the whole fused replay loop, factored out of ``emulate`` so
+        a schedule compiled in one process can be shipped (see
+        ``CompiledSchedule.detach``) and replayed by a fleet worker's own
+        emulator with identical consumption accounting: segments run as one
+        dispatch each, barrier steps replay per-sample through this
+        emulator's atoms — including collective legs when this emulator
+        owns a mesh.
+        """
+        consumed = ResourceVector()
+        per_sample: List[float] = []
+        dispatches = 0
+        coll_dispatches = 0
+        t_start = time.perf_counter()
+        for step in sched.steps:
+            if isinstance(step, FusedSegment):
+                t0 = time.perf_counter()
+                dispatched = self._segments.run(step)  # ONE dispatch+sync
+                dt = time.perf_counter() - t0
+                dispatches += int(dispatched)
+                # apportion the segment's wall time across its rows so
+                # per_sample_s keeps one entry per executed sample
+                per_sample.extend([dt / step.n_rows] * step.n_rows)
+                if verify:
+                    for rr in step.rows:
+                        consumed = consumed.add(rr)
+            else:
+                consumed, d, c = self._run_per_sample(
+                    step.resources, step.count, flops_scale,
+                    storage_scale, mem_scale, consumed, per_sample,
+                    verify)
+                dispatches += d
+                coll_dispatches += c
+        ttc = time.perf_counter() - t_start
+        return EmulationReport(command=command, ttc_s=ttc,
+                               n_samples=len(per_sample), consumed=consumed,
+                               per_sample_s=per_sample, planned=planned,
+                               mode="fused", n_dispatches=dispatches,
+                               n_collective_dispatches=coll_dispatches)
 
     def emulate(self, profile: SynapseProfile, *, flops_scale: float = 1.0,
                 storage_scale: float = 1.0, mem_scale: float = 1.0,
                 verify: bool = True, fused: bool = True) -> EmulationReport:
         runs = _collapse(profile.samples)
         use_fused = fused and self._fusable
-        consumed = ResourceVector()
-        per_sample: List[float] = []
-        dispatches = 0
         t_start = time.perf_counter()
         if use_fused:
             sched = compile_schedule(runs, compute=self.compute,
@@ -229,54 +330,80 @@ class Emulator:
                                      collective=self.collective,
                                      flops_scale=flops_scale,
                                      mem_scale=mem_scale, speed=self.speed)
-            for step in sched.steps:
-                if isinstance(step, FusedSegment):
-                    t0 = time.perf_counter()
-                    dispatched = self._segments.run(step)  # ONE dispatch+sync
-                    dt = time.perf_counter() - t0
-                    dispatches += int(dispatched)
-                    # apportion the segment's wall time across its rows so
-                    # per_sample_s keeps one entry per executed sample
-                    per_sample.extend([dt / step.n_rows] * step.n_rows)
-                    if verify:
-                        for rr in step.rows:
-                            consumed = consumed.add(rr)
-                else:
-                    consumed, d = self._run_per_sample(
-                        step.resources, step.count, flops_scale,
-                        storage_scale, mem_scale, consumed, per_sample,
-                        verify)
-                    dispatches += d
-        else:
-            for r, count in runs:
-                consumed, d = self._run_per_sample(
-                    r, count, flops_scale, storage_scale, mem_scale,
-                    consumed, per_sample, verify)
-                dispatches += d
+            rep = self.replay(sched, command=profile.command,
+                              planned=profile.totals,
+                              flops_scale=flops_scale,
+                              storage_scale=storage_scale,
+                              mem_scale=mem_scale, verify=verify)
+            rep.ttc_s = time.perf_counter() - t_start   # include compile
+            return rep
+        consumed = ResourceVector()
+        per_sample: List[float] = []
+        dispatches = 0
+        coll_dispatches = 0
+        for r, count in runs:
+            consumed, d, c = self._run_per_sample(
+                r, count, flops_scale, storage_scale, mem_scale,
+                consumed, per_sample, verify)
+            dispatches += d
+            coll_dispatches += c
         ttc = time.perf_counter() - t_start
         return EmulationReport(command=profile.command, ttc_s=ttc,
                                n_samples=len(per_sample), consumed=consumed,
                                per_sample_s=per_sample,
                                planned=profile.totals,
-                               mode="fused" if use_fused else "per_sample",
-                               n_dispatches=dispatches)
+                               mode="per_sample",
+                               n_dispatches=dispatches,
+                               n_collective_dispatches=coll_dispatches)
 
     def emulate_many(self, profiles: List[SynapseProfile], *,
                      max_workers: int = 4, flops_scale: float = 1.0,
                      storage_scale: float = 1.0, mem_scale: float = 1.0,
-                     verify: bool = True, fused: bool = True) -> FleetReport:
-        """Fleet mode: replay many profiles concurrently on worker threads.
+                     verify: bool = True, fused: bool = True,
+                     executor: str = "thread",
+                     mesh_spec=None) -> FleetReport:
+        """Fleet mode: replay many profiles concurrently.
+
+        ``executor="thread"`` (default) runs every profile on worker
+        threads inside this process, sharing this emulator's atoms through
+        a keyed plan cache — identical (atom, amount) plans are built, and
+        their XLA programs traced, once for the whole fleet instead of once
+        per profile — and sharing the SegmentRunner's fused programs the
+        same way.  ``executor="process"`` compiles each profile to a
+        ``CompiledSchedule`` here, detaches it to a picklable bundle, and
+        ships it to a spawn-based worker-process pool
+        (``repro.fleet.ProcessFleet``) where each worker owns its own
+        emulator, jitted programs, and — when ``mesh_spec`` (a
+        ``repro.fleet.MeshSpec``) is given — its own device mesh, so
+        collective legs *execute* in fleet mode instead of being dropped.
+        See ``repro.fleet`` for the thread-vs-process decision matrix.
 
         Each profile replays on exactly one worker, so the per-profile
         sample-ordering contract is intact; ordering *across* profiles is
         deliberately unconstrained (a fleet has no inter-profile
-        dependencies).  All workers share this emulator's atoms through a
-        keyed plan cache — identical (atom, amount) plans are built, and
-        their XLA programs traced, once for the whole fleet instead of once
-        per profile — and share the SegmentRunner's fused programs the same
-        way.  The pool is capped at ``len(profiles)`` so tiny fleets don't
-        spawn idle threads.
+        dependencies).  The pool is capped at ``len(profiles)`` so tiny
+        fleets don't spawn idle workers.
         """
+        if executor == "process":
+            if not (fused and self._fusable):
+                raise ValueError("executor='process' ships compiled "
+                                 "schedules and requires the fused jnp "
+                                 "replay path (fused=True, backend='jnp')")
+            from repro.fleet.executor import run_process_fleet
+            return run_process_fleet(self, profiles, max_workers=max_workers,
+                                     mesh_spec=mesh_spec,
+                                     flops_scale=flops_scale,
+                                     storage_scale=storage_scale,
+                                     mem_scale=mem_scale, verify=verify)
+        if executor != "thread":
+            raise ValueError(f"unknown executor {executor!r}; "
+                             "expected 'thread' or 'process'")
+        if mesh_spec is not None:
+            raise ValueError("mesh_spec requires executor='process': "
+                             "thread workers share one jax client and "
+                             "cannot own per-worker meshes, so the "
+                             "collective legs it asks for would be "
+                             "silently dropped")
         workers = max(1, min(max_workers, len(profiles)))
         # One fleet at a time per emulator: the atoms, ephemeral cache
         # attach/detach and scratch-file cleanup are instance state.

@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import threading
 from dataclasses import dataclass, field
-from typing import Dict, List, Union
+from typing import Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -84,6 +84,26 @@ class CompiledSchedule:
     """A profile lowered to fused segments split by barrier steps."""
     steps: List[ScheduleStep] = field(default_factory=list)
 
+    def detach(self) -> Dict:
+        """Lower this schedule to a plain-data payload (ints, floats, dicts,
+        one int32 ndarray per segment) with no references to atoms, meshes
+        or jitted programs — safe to pickle across a process boundary and
+        cheap to ship to fleet workers.  ``rehydrate_schedule`` is the exact
+        inverse: resource vectors round-trip bit-identically (float fields
+        are copied, never re-derived), which is what lets a process-fleet
+        replay report consumed totals equal to an in-process replay."""
+        steps = []
+        for s in self.steps:
+            if isinstance(s, FusedSegment):
+                steps.append({"kind": "segment",
+                              "table": np.asarray(s.table, dtype=np.int32),
+                              "rows": [r.to_dict() for r in s.rows]})
+            else:
+                steps.append({"kind": "barrier",
+                              "resources": s.resources.to_dict(),
+                              "count": int(s.count)})
+        return {"version": 1, "steps": steps}
+
     @property
     def segments(self) -> List[FusedSegment]:
         return [s for s in self.steps if isinstance(s, FusedSegment)]
@@ -105,9 +125,33 @@ class CompiledSchedule:
                 "memory_iters": sum(s.memory_iters for s in self.segments)}
 
 
+def rehydrate_schedule(payload: Dict) -> CompiledSchedule:
+    """Rebuild a ``CompiledSchedule`` from a ``CompiledSchedule.detach()``
+    payload.  Tables and resource vectors come back bit-identical."""
+    if not isinstance(payload, dict) or payload.get("version") != 1:
+        raise ValueError(f"unsupported schedule payload: "
+                         f"{payload.get('version') if isinstance(payload, dict) else payload!r}")
+    steps: List[ScheduleStep] = []
+    for s in payload["steps"]:
+        kind = s.get("kind")
+        if kind == "segment":
+            table = np.asarray(s["table"], dtype=np.int32).reshape(-1, 2)
+            steps.append(FusedSegment(
+                table=table,
+                rows=[ResourceVector.from_dict(r) for r in s["rows"]]))
+        elif kind == "barrier":
+            steps.append(BarrierStep(
+                resources=ResourceVector.from_dict(s["resources"]),
+                count=int(s["count"])))
+        else:
+            raise ValueError(f"unknown schedule step kind {kind!r}")
+    return CompiledSchedule(steps=steps)
+
+
 def compile_schedule(runs, *, compute: ComputeAtom, memory: MemoryAtom,
                      collective=None, flops_scale: float = 1.0,
-                     mem_scale: float = 1.0, speed: float = 1.0
+                     mem_scale: float = 1.0, speed: float = 1.0,
+                     keep_collectives: Optional[bool] = None
                      ) -> CompiledSchedule:
     """Lower collapsed (ResourceVector, count) runs into a CompiledSchedule.
 
@@ -116,7 +160,16 @@ def compile_schedule(runs, *, compute: ComputeAtom, memory: MemoryAtom,
     samples), then each amount is scaled and quantized by the owning atom's
     ``iters_for``.  Amounts below one iteration lower to a no-op row, same
     as the atoms' zero-iteration plans.
+
+    ``keep_collectives`` overrides whether runs with wire bytes lower to
+    ``BarrierStep``s (executable collective legs) or fold into fused
+    segments (accounting only).  The default follows ``collective``: with
+    no collective atom there is nothing to execute them on.  A schedule
+    compiled for a process fleet passes ``True`` — the *workers* own
+    meshes even when this process does not.
     """
+    if keep_collectives is None:
+        keep_collectives = collective is not None
     steps: List[ScheduleStep] = []
     table_rows: List = []
     vecs: List[ResourceVector] = []
@@ -131,7 +184,7 @@ def compile_schedule(runs, *, compute: ComputeAtom, memory: MemoryAtom,
 
     for r, count in runs:
         has_storage = (r.storage_read_bytes > 0 or r.storage_write_bytes > 0)
-        has_collective = collective is not None and r.ici_total > 0
+        has_collective = keep_collectives and r.ici_total > 0
         if has_storage or has_collective:
             flush()
             steps.append(BarrierStep(resources=r, count=count))

@@ -1,0 +1,46 @@
+"""Process-level fleet execution: past the thread/GIL ceiling.
+
+``Emulator.emulate_many`` replays a fleet of profiles concurrently; this
+package supplies its ``executor="process"`` backend.  The schedule compiler
+made the split cheap: a ``CompiledSchedule`` is plain numpy iteration
+tables + resource vectors, so the parent compiles once, detaches each
+schedule into a picklable ``ScheduleBundle``, and ships it to a pool of
+spawn-based worker processes (``ProcessFleet``).  Each worker builds its
+own ``Emulator`` + ``SegmentRunner`` exactly once — its own jax client,
+its own jitted programs, its own plan cache, and (given a ``MeshSpec``)
+its own device mesh — then replays bundles fused and streams back
+``EmulationReport``s whose consumed totals are bit-identical to an
+in-process replay of the same profile.
+
+Thread vs process executor — decision matrix:
+
+  =====================  =======================  =========================
+  dimension              executor="thread"        executor="process"
+  =====================  =======================  =========================
+  parallelism ceiling    one GIL + one jax        one jax client *per
+                         client; scales until     worker*; scales with
+                         dispatch serializes      cores/hosts
+  per-fleet overhead     ~zero (shared pool)      worker spawn + jax import
+                                                  + trace, ONCE per worker
+                                                  (keep the pool warm)
+  plan/program sharing   fleet-wide PlanCache     per-worker cache; programs
+                         + shared SegmentRunner   traced once per worker
+  collectives            dropped (no per-thread   EXECUTE: each worker owns
+                         mesh is possible)        a mesh built from MeshSpec
+  failure isolation      a crash takes the        worker death is reaped,
+                         whole fleet down         bundle re-queued, pool
+                                                  refilled
+  best for               small fleets, tiny       large fleets, collective
+                         profiles, tests          legs, saturating a host
+  =====================  =======================  =========================
+
+Rule of thumb: threads while the fleet is small enough that one process's
+dispatch throughput isn't the bottleneck; processes when it is, when the
+profiles carry collective legs, or when worker isolation matters.  This is
+also the stepping stone to multi-host scale-out — a ``ScheduleBundle`` that
+crosses a process boundary crosses a network boundary just as easily.
+"""
+from repro.fleet.bundle import (MeshSpec, ScheduleBundle,  # noqa: F401
+                                WorkerSpec, bundle_profile)
+from repro.fleet.executor import (ProcessFleet,  # noqa: F401
+                                  run_process_fleet)

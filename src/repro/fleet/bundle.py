@@ -1,0 +1,107 @@
+"""Serialization layer: detach compiled schedules into shippable bundles.
+
+A ``ScheduleBundle`` is everything one fleet worker needs to replay one
+profile, with every live object stripped out: the detached schedule payload
+(plain ints/floats/dicts + one int32 table per segment, from
+``CompiledSchedule.detach()``), the replay scales, and identification
+metadata.  The emulator configuration travels separately — once per worker,
+not once per bundle — as a ``WorkerSpec``: the parent's ``EmulatorSpec``
+(calibration + atom configs) plus an optional ``MeshSpec`` describing the
+device mesh each worker must build for itself.  Meshes hold live device
+handles and jitted collectives, so they can never cross the process
+boundary; their *specs* can, which is exactly what lets ``CollectiveAtom``
+participate in process-fleet mode.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+from repro.core.emulator import Emulator, EmulatorSpec
+from repro.core.metrics import ResourceVector, SynapseProfile
+from repro.core.schedule import CompiledSchedule, rehydrate_schedule
+
+
+@dataclass(frozen=True)
+class MeshSpec:
+    """Picklable description of the mesh a worker builds from its own
+    devices (``jax.make_mesh``).  The parent sets
+    ``--xla_force_host_platform_device_count=device_count`` in the spawned
+    worker's environment so a CPU worker has enough devices to satisfy it.
+    """
+    shape: Tuple[int, ...] = (2,)
+    axes: Tuple[str, ...] = ("model",)
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes) or not self.shape:
+            raise ValueError(f"mesh shape {self.shape} and axes {self.axes} "
+                             "must be equal-length and non-empty")
+
+    @property
+    def device_count(self) -> int:
+        return int(math.prod(self.shape))
+
+    def build(self):
+        """Construct the live mesh — call only inside the owning process."""
+        from repro.launch.mesh import make_mesh
+        return make_mesh(self.shape, self.axes)
+
+
+@dataclass(frozen=True)
+class WorkerSpec:
+    """Per-worker configuration shipped once at spawn: how to build the
+    worker's emulator (and mesh), and whether to pre-trace the common fused
+    programs before accepting bundles."""
+    emulator: EmulatorSpec
+    mesh: Optional[MeshSpec] = None
+    warmup: bool = True
+
+
+@dataclass
+class ScheduleBundle:
+    """One profile's compiled schedule, detached for shipping.
+
+    ``payload`` is the plain-data form from ``CompiledSchedule.detach()``;
+    ``rehydrate()`` restores a ``CompiledSchedule`` whose tables and
+    resource vectors are bit-identical to the originals, so a worker's
+    ``Emulator.replay`` reports exactly the totals an in-process replay
+    would.  The scales are baked in at bundle time because flop/byte
+    amounts were already quantized into the tables with them applied —
+    the barrier steps replayed per-sample on the worker need the same
+    values.
+    """
+    command: str
+    payload: Dict
+    flops_scale: float = 1.0
+    storage_scale: float = 1.0
+    mem_scale: float = 1.0
+    verify: bool = True
+    n_profile_samples: int = 0
+    planned: Optional[ResourceVector] = None
+    tags: Dict[str, str] = field(default_factory=dict)
+
+    def rehydrate(self) -> CompiledSchedule:
+        return rehydrate_schedule(self.payload)
+
+
+def bundle_profile(emulator: Emulator, profile: SynapseProfile, *,
+                   keep_collectives: Optional[bool] = None,
+                   flops_scale: float = 1.0, storage_scale: float = 1.0,
+                   mem_scale: float = 1.0,
+                   verify: bool = True) -> ScheduleBundle:
+    """Compile one profile on ``emulator`` and detach it into a bundle.
+
+    ``keep_collectives=True`` lowers wire-byte runs to executable barrier
+    steps even though *this* process has no mesh — pass it when the bundle
+    is headed for workers that do (i.e. the fleet has a ``MeshSpec``).
+    """
+    sched = emulator.compile(profile, flops_scale=flops_scale,
+                             mem_scale=mem_scale,
+                             keep_collectives=keep_collectives)
+    return ScheduleBundle(command=profile.command, payload=sched.detach(),
+                          flops_scale=flops_scale,
+                          storage_scale=storage_scale, mem_scale=mem_scale,
+                          verify=verify,
+                          n_profile_samples=len(profile.samples),
+                          planned=profile.totals, tags=dict(profile.tags))

@@ -1,0 +1,316 @@
+"""Process-level fleet executor: replay schedule bundles on worker processes.
+
+``ProcessFleet`` owns a pool of spawn-based worker processes (see
+``repro.fleet.worker``), each with its own jax client, emulator, jitted
+programs, and — when the ``WorkerSpec`` carries a ``MeshSpec`` — its own
+device mesh.  The parent compiles profiles once, detaches them into
+``ScheduleBundle``s, and streams them to whichever worker is idle; workers
+stream back ``EmulationReport``s.  Scheduling is work-stealing-simple:
+one in-flight bundle per worker, next bundle to the first worker that
+frees up, so a straggler profile never blocks the rest of the fleet.
+
+Worker death is handled gracefully: a died worker's in-flight bundle is
+re-queued (with a bounded attempt count, so a bundle that *kills* workers
+poisons the run instead of looping forever), a replacement worker is
+spawned while the respawn budget lasts, and the fleet keeps draining on the
+survivors.  Only when no worker is left alive and none can be respawned
+does ``run`` raise.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+import time
+from collections import deque
+from multiprocessing import connection as mp_conn
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.emulator import EmulationReport, Emulator, FleetReport
+from repro.fleet.bundle import ScheduleBundle, WorkerSpec, bundle_profile
+from repro.fleet.worker import worker_loop
+
+_MAX_ATTEMPTS = 3          # dispatches per bundle before declaring it poison
+
+
+class _Worker:
+    __slots__ = ("proc", "conn", "task", "ready")
+
+    def __init__(self, proc, conn):
+        self.proc = proc
+        self.conn = conn
+        # in-flight work as (run epoch, bundle index): a run() that raises
+        # leaves stragglers replaying, and the next run() must neither
+        # mistake their late results for its own nor dispatch over them
+        self.task: Optional[Tuple[int, int]] = None
+        self.ready = False
+
+    @property
+    def alive(self) -> bool:
+        return self.proc.is_alive()
+
+
+class ProcessFleet:
+    """A pool of emulator worker processes that replay ``ScheduleBundle``s.
+
+    The pool is warm state: spawn it once, ``run()`` it many times (each
+    run reuses the workers' traced programs and plan caches), ``close()``
+    it when done — or use it as a context manager.  ``worker_deaths`` and
+    ``respawns`` count recovery events across the pool's lifetime.
+    """
+
+    def __init__(self, n_workers: int, spec: WorkerSpec, *,
+                 respawn: bool = True, max_respawns: Optional[int] = None):
+        if n_workers < 1:
+            raise ValueError("ProcessFleet needs n_workers >= 1")
+        self.spec = spec
+        self.n_workers = n_workers
+        self.worker_deaths = 0
+        self.respawns = 0
+        self._respawn = respawn
+        self._respawns_left = (n_workers if max_respawns is None
+                               else max_respawns)
+        self._ctx = mp.get_context("spawn")
+        self._workers: List[_Worker] = []
+        self._closed = False
+        self._epoch = 0
+        for _ in range(n_workers):
+            self._spawn()
+
+    # -- pool plumbing ------------------------------------------------------
+
+    def _spawn(self) -> None:
+        parent_conn, child_conn = self._ctx.Pipe()
+        # The mesh's device count must reach the child's XLA before its
+        # backend initializes; setting it in the *parent's* environment
+        # around the spawn is the only ordering that beats every module the
+        # child bootstrap may import.
+        old_flags = os.environ.get("XLA_FLAGS")
+        if self.spec.mesh is not None:
+            # append AFTER any inherited flags: XLA takes the last
+            # occurrence of a repeated flag, and this repo's own tooling
+            # (dryrun, test_distributed) exports its own device-count flag
+            os.environ["XLA_FLAGS"] = (
+                (f"{old_flags} " if old_flags else "")
+                + f"--xla_force_host_platform_device_count="
+                  f"{self.spec.mesh.device_count}")
+        try:
+            proc = self._ctx.Process(target=worker_loop,
+                                     args=(child_conn, self.spec),
+                                     daemon=True)
+            proc.start()
+        finally:
+            if self.spec.mesh is not None:
+                if old_flags is None:
+                    os.environ.pop("XLA_FLAGS", None)
+                else:
+                    os.environ["XLA_FLAGS"] = old_flags
+        child_conn.close()
+        self._workers.append(_Worker(proc, parent_conn))
+
+    @property
+    def pids(self) -> List[int]:
+        return [w.proc.pid for w in self._workers if w.alive]
+
+    def _reap(self, w: _Worker, pending: deque,
+              epoch: Optional[int] = None) -> None:
+        """A worker died: requeue its in-flight bundle (only if it belongs
+        to the current run — a straggler from a raised run is dropped),
+        refill the pool."""
+        self.worker_deaths += 1
+        if w.task is not None and epoch is not None and w.task[0] == epoch:
+            pending.appendleft(w.task[1])
+        w.task = None
+        try:
+            w.conn.close()
+        except OSError:
+            pass
+        self._workers.remove(w)
+        w.proc.join(timeout=1.0)
+        if self._respawn and self._respawns_left > 0:
+            self._respawns_left -= 1
+            self.respawns += 1
+            self._spawn()
+
+    def warmup(self, timeout: float = 120.0) -> List[Dict]:
+        """Block until every live worker reported ready; returns their
+        ready infos.  Not required before ``run`` (dispatches queue in the
+        pipe), but useful to separate spawn/trace cost from replay cost —
+        ``benchmarks/bench_fleet.py`` does exactly that."""
+        deadline = time.monotonic() + timeout
+        infos = []
+        while any(w.alive and not w.ready for w in self._workers):
+            if time.monotonic() > deadline:
+                raise TimeoutError("fleet workers did not become ready "
+                                   f"within {timeout}s")
+            conns = [w.conn for w in self._workers
+                     if w.alive and not w.ready]
+            for conn in mp_conn.wait(conns, timeout=0.5):
+                w = next(x for x in self._workers if x.conn is conn)
+                try:
+                    msg = conn.recv()
+                except (EOFError, ConnectionResetError, OSError):
+                    self._reap(w, deque())
+                    continue
+                if msg[0] == "ready":
+                    w.ready = True
+                    infos.append(msg[1])
+                elif msg[0] == "err":
+                    raise RuntimeError(
+                        f"fleet worker failed to initialize:\n{msg[2]}")
+        if not self._workers:
+            raise RuntimeError("no fleet worker survived initialization")
+        return infos
+
+    # -- execution ----------------------------------------------------------
+
+    def run(self, bundles: Sequence[ScheduleBundle], *,
+            timeout: float = 600.0) -> List[EmulationReport]:
+        """Replay every bundle; returns reports in bundle order.
+
+        Raises RuntimeError on a worker-reported replay failure, on a
+        poison bundle (one that outlived ``_MAX_ATTEMPTS`` dispatch
+        attempts across dying workers), or when the whole pool is dead
+        with work still pending.
+        """
+        if self._closed:
+            raise RuntimeError("ProcessFleet is closed")
+        # A raised run (worker error, poison bundle, timeout) leaves
+        # stragglers replaying on live workers.  Each run gets a fresh
+        # epoch: stragglers' late results are recognized by their stale
+        # epoch, discarded, and merely free their worker — they are never
+        # returned as this run's reports and never block dispatch forever.
+        self._epoch += 1
+        epoch = self._epoch
+        pending = deque(range(len(bundles)))
+        attempts = [0] * len(bundles)
+        results: Dict[int, EmulationReport] = {}
+        deadline = time.monotonic() + timeout
+        while len(results) < len(bundles):
+            if time.monotonic() > deadline:
+                raise TimeoutError(f"fleet run exceeded {timeout}s with "
+                                   f"{len(bundles) - len(results)} bundle(s) "
+                                   "unfinished")
+            # dispatch to idle workers (death noticed on send is handled
+            # exactly like death noticed on receive)
+            for w in list(self._workers):
+                if w.task is None and pending:
+                    if not w.alive:
+                        self._reap(w, pending, epoch)
+                        continue
+                    idx = pending.popleft()
+                    if attempts[idx] >= _MAX_ATTEMPTS:
+                        raise RuntimeError(
+                            f"bundle {idx} ({bundles[idx].command!r}) failed "
+                            f"{attempts[idx]} dispatch attempts — poison "
+                            "bundle, aborting the fleet run")
+                    attempts[idx] += 1
+                    try:
+                        w.conn.send(("run", idx, bundles[idx]))
+                        w.task = (epoch, idx)
+                    except (BrokenPipeError, OSError):
+                        pending.appendleft(idx)
+                        attempts[idx] -= 1
+                        self._reap(w, pending, epoch)
+            if not self._workers:
+                raise RuntimeError(
+                    f"all fleet workers died ({self.worker_deaths} death(s)) "
+                    f"with {len(bundles) - len(results)} bundle(s) pending")
+            # collect
+            conns = [w.conn for w in self._workers]
+            for conn in mp_conn.wait(conns, timeout=0.5):
+                w = next((x for x in self._workers if x.conn is conn), None)
+                if w is None:
+                    continue
+                try:
+                    msg = conn.recv()
+                except (EOFError, ConnectionResetError, OSError):
+                    self._reap(w, pending, epoch)
+                    continue
+                if msg[0] == "ready":
+                    w.ready = True
+                elif msg[0] == "ok":
+                    _, idx, rep = msg
+                    current = w.task is not None and w.task[0] == epoch
+                    w.task = None
+                    if current:
+                        results[idx] = rep
+                elif msg[0] == "err":
+                    _, idx, tb = msg
+                    if idx is None:
+                        raise RuntimeError(
+                            f"fleet worker failed on initialization:\n{tb}")
+                    current = w.task is not None and w.task[0] == epoch
+                    w.task = None          # terminal either way
+                    if current:
+                        raise RuntimeError(
+                            f"fleet worker failed on bundle {idx} "
+                            f"({bundles[idx].command!r}):\n{tb}")
+        return [results[i] for i in range(len(bundles))]
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for w in self._workers:
+            if w.alive:
+                try:
+                    w.conn.send(("stop",))
+                except (BrokenPipeError, OSError):
+                    pass
+        for w in self._workers:
+            w.proc.join(timeout=5.0)
+            if w.proc.is_alive():
+                w.proc.terminate()
+                w.proc.join(timeout=2.0)
+            try:
+                w.conn.close()
+            except OSError:
+                pass
+        self._workers.clear()
+
+    def __enter__(self) -> "ProcessFleet":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def run_process_fleet(emulator: Emulator, profiles, *, max_workers: int = 4,
+                      mesh_spec=None, flops_scale: float = 1.0,
+                      storage_scale: float = 1.0, mem_scale: float = 1.0,
+                      verify: bool = True,
+                      fleet: Optional[ProcessFleet] = None) -> FleetReport:
+    """Compile → detach → ship: one-call process-fleet replay.
+
+    Backs ``Emulator.emulate_many(executor="process")``.  Pass ``fleet`` to
+    reuse a warm ``ProcessFleet`` (the caller keeps ownership); otherwise a
+    pool sized ``min(max_workers, len(profiles))`` is spawned and torn down
+    around this one run.  With ``mesh_spec`` set, wire-byte runs compile to
+    executable barrier steps and every worker builds its own mesh — the
+    first fleet mode in which collective legs actually move bytes.
+    """
+    keep = True if mesh_spec is not None else None
+    bundles = [bundle_profile(emulator, p, keep_collectives=keep,
+                              flops_scale=flops_scale,
+                              storage_scale=storage_scale,
+                              mem_scale=mem_scale, verify=verify)
+               for p in profiles]
+    own = fleet is None
+    if own:
+        workers = max(1, min(max_workers, len(profiles)))
+        fleet = ProcessFleet(workers, WorkerSpec(emulator=emulator.spec(),
+                                                 mesh=mesh_spec))
+    t0 = time.perf_counter()
+    try:
+        reports = fleet.run(bundles)
+    finally:
+        if own:
+            fleet.close()
+    wall = time.perf_counter() - t0
+    return FleetReport(
+        reports=reports, wall_s=wall,
+        serial_s=sum(r.ttc_s for r in reports),
+        max_workers=fleet.n_workers,
+        cache_stats={"workers": fleet.n_workers,
+                     "worker_deaths": fleet.worker_deaths,
+                     "respawns": fleet.respawns})

@@ -1,0 +1,99 @@
+"""Fleet worker process: build an emulator once, replay bundles forever.
+
+Spawned (never forked — a forked child would inherit the parent's
+initialized XLA backend and its single-device view) by
+``repro.fleet.executor.ProcessFleet`` with one end of a pipe and a
+``WorkerSpec``.  Module-level imports stay light so worker start-up cost is
+dominated by exactly one thing: the child's own jax import + program
+tracing, which happens once per *worker*, not once per bundle — the whole
+point of shipping detached schedules.
+
+Protocol (pickled tuples over the pipe):
+
+  parent -> worker:  ("run", idx, ScheduleBundle) | ("stop",)
+  worker -> parent:  ("ready", info_dict)
+                     ("ok", idx, EmulationReport)
+                     ("err", idx | None, traceback_str)
+
+A bundle that fails to replay sends ``err`` and the worker keeps serving
+(the parent decides whether to abort); a failure during initialization
+sends ``err`` with ``idx=None`` and exits.
+"""
+from __future__ import annotations
+
+import os
+import traceback
+
+
+def _init(spec):
+    """Build this worker's emulator (and mesh) from its spec; returns
+    (emulator, info dict for the ready message)."""
+    import jax
+
+    from repro.core.atoms import PlanCache
+    from repro.core.schedule import FusedSegment
+
+    mesh = None
+    if spec.mesh is not None:
+        if jax.device_count() < spec.mesh.device_count:
+            raise RuntimeError(
+                f"worker has {jax.device_count()} device(s) but the mesh "
+                f"spec needs {spec.mesh.device_count}; the parent must set "
+                "--xla_force_host_platform_device_count before spawn")
+        mesh = spec.mesh.build()
+    em = spec.emulator.build(mesh=mesh)
+    # one plan cache per worker process: barrier-step plans (storage,
+    # collectives, odd-sized legs) dedup across every bundle this worker
+    # will ever replay
+    em.set_plan_cache(PlanCache())
+    if spec.warmup:
+        import numpy as np
+        # trace the most common fused program shape (1-row table, both
+        # carries) so the first real bundle doesn't pay for it
+        em._segments.run(FusedSegment(
+            table=np.asarray([[1, 1]], dtype=np.int32), rows=[]))
+        if em.collective is not None:
+            em.collective.plan(float(1 << 10))()   # trace a tiny collective
+    return em, {"pid": os.getpid(), "devices": jax.device_count(),
+                "mesh": None if spec.mesh is None else list(spec.mesh.shape),
+                "warm": bool(spec.warmup)}
+
+
+def worker_loop(conn, spec) -> None:
+    """Process entry point: initialize, announce readiness, serve bundles."""
+    try:
+        em, info = _init(spec)
+    except BaseException:  # noqa: BLE001 — report init failure, then die
+        try:
+            conn.send(("err", None, traceback.format_exc()))
+        finally:
+            conn.close()
+        return
+    conn.send(("ready", info))
+    try:
+        while True:
+            try:
+                msg = conn.recv()
+            except EOFError:          # parent died: nothing left to serve
+                break
+            if msg[0] == "stop":
+                break
+            if msg[0] != "run":
+                conn.send(("err", None, f"unknown message {msg[0]!r}"))
+                continue
+            _, idx, bundle = msg
+            try:
+                rep = em.replay(bundle.rehydrate(),
+                                command=bundle.command,
+                                planned=bundle.planned,
+                                flops_scale=bundle.flops_scale,
+                                storage_scale=bundle.storage_scale,
+                                mem_scale=bundle.mem_scale,
+                                verify=bundle.verify)
+            except BaseException:  # noqa: BLE001 — bad bundle, worker lives
+                conn.send(("err", idx, traceback.format_exc()))
+                continue
+            conn.send(("ok", idx, rep))
+    finally:
+        em.storage.cleanup()
+        conn.close()

@@ -11,7 +11,10 @@ package registers them all:
 
 ``driver.run_scenario`` wires a scenario end-to-end
 (generate -> predict -> emulate -> store); ``driver.run_fleet`` replays many
-concurrently through ``Emulator.emulate_many``.
+concurrently through ``Emulator.emulate_many`` — on worker threads, or on
+the process-level fleet executor (``repro.fleet``) via
+``executor="process"``.  ``python -m repro.scenarios list|run|fleet`` is
+the command-line front door (see ``__main__``).
 """
 from repro.scenarios import fanout, mixed, retry, serving, training  # noqa
 from repro.scenarios.base import (ScenarioSpec, generate,  # noqa

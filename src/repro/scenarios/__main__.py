@@ -1,0 +1,166 @@
+"""Scenario CLI: drive the scenario engine from the command line.
+
+    python -m repro.scenarios list
+    python -m repro.scenarios run training_scan -p n_steps=6 -p ckpt_every=3
+    python -m repro.scenarios fleet training_scan:n_steps=6 serving_traffic \
+        --executor process --workers 2 --mesh 2
+
+``list`` shows every registered generator with its defaults; ``run`` pushes
+one scenario through generate -> predict -> emulate (-> store with
+``--store``); ``fleet`` replays a batch concurrently, with ``--executor``
+selecting the in-process thread pool or the process-level fleet executor
+(``repro.fleet``) and ``--mesh N`` giving each worker process an N-device
+mesh so collective legs execute.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Tuple
+
+
+def _coerce(text: str):
+    """CLI param values: int -> float -> bool -> str, first parse wins."""
+    for cast in (int, float):
+        try:
+            return cast(text)
+        except ValueError:
+            pass
+    if text.lower() in ("true", "false"):
+        return text.lower() == "true"
+    return text
+
+
+def _parse_params(pairs: List[str]) -> Dict:
+    params = {}
+    for pair in pairs:
+        if "=" not in pair:
+            raise SystemExit(f"bad -p {pair!r}: expected key=value")
+        k, v = pair.split("=", 1)
+        params[k.strip()] = _coerce(v.strip())
+    return params
+
+
+def _parse_job(text: str) -> Tuple[str, Dict]:
+    """``name`` or ``name:k=v,k=v`` -> (name, params)."""
+    name, _, rest = text.partition(":")
+    params = _parse_params(rest.split(",")) if rest else {}
+    return name.strip(), params
+
+
+def _cmd_list(args) -> int:
+    from repro.scenarios import get_scenario, list_scenarios
+    for name in list_scenarios():
+        spec = get_scenario(name)
+        print(f"{name:20s} {spec.description}")
+        defaults = ", ".join(f"{k}={v}" for k, v in spec.defaults.items())
+        print(f"{'':20s}   defaults: {defaults}")
+    return 0
+
+
+def _store(path: Optional[str]):
+    if path is None:
+        return None
+    from repro.core import ProfileStore
+    return ProfileStore(path)
+
+
+def _cmd_run(args) -> int:
+    from repro.scenarios import run_scenario
+    res = run_scenario(args.name, store=_store(args.store),
+                       emulate=not args.no_emulate,
+                       fused=not args.per_sample,
+                       **_parse_params(args.param))
+    out = res.summary()
+    if res.report is not None:
+        out["report"] = res.report.summary()
+    if args.json:
+        print(json.dumps(out, indent=2, default=str))
+        return 0
+    print(f"scenario {res.name}: {len(res.profile.samples)} samples, "
+          f"{res.profile.totals.flops / 1e9:.3f} GFLOP")
+    for hw, row in res.predictions.items():
+        print(f"  predicted on {hw:18s} ttc_max={row['ttc_max']:.3e}s "
+              f"dominant={row['dominant_total']}")
+    if res.report is not None:
+        r = res.report
+        print(f"  emulated here: ttc={r.ttc_s:.3f}s mode={r.mode} "
+              f"dispatches={r.n_dispatches}")
+    if res.run_id is not None:
+        print(f"  stored as {res.run_id}")
+    return 0
+
+
+def _cmd_fleet(args) -> int:
+    from repro.scenarios import run_fleet
+    mesh_spec = None
+    if args.mesh:
+        from repro.fleet import MeshSpec
+        mesh_spec = MeshSpec(shape=(args.mesh,), axes=("model",))
+    jobs = [_parse_job(j) for j in args.job]
+    out = run_fleet(jobs, store=_store(args.store),
+                    max_workers=args.workers, executor=args.executor,
+                    mesh_spec=mesh_spec)
+    f = out.fleet
+    if args.json:
+        print(json.dumps({"fleet": f.summary(),
+                          "reports": [r.report.summary()
+                                      for r in out.results]},
+                         indent=2, default=str))
+        return 0
+    print(f"fleet: {f.n_profiles} profiles on {f.max_workers} "
+          f"{args.executor} worker(s) in {f.wall_s:.3f}s "
+          f"(per-profile TTCs sum to {f.serial_s:.3f}s)")
+    for r in out.results:
+        rep = r.report
+        coll = (f" collective_dispatches={rep.n_collective_dispatches}"
+                if rep.n_collective_dispatches else "")
+        print(f"  {r.name:20s} ttc={rep.ttc_s:.3f}s mode={rep.mode}"
+              f" dispatches={rep.n_dispatches}{coll}")
+    extra = {k: v for k, v in f.cache_stats.items()}
+    if extra:
+        print("  stats:", ", ".join(f"{k}={v}" for k, v in extra.items()))
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.scenarios",
+        description="Synapse scenario engine CLI")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    sub.add_parser("list", help="list registered scenarios")
+
+    run_p = sub.add_parser("run", help="run one scenario end-to-end")
+    run_p.add_argument("name")
+    run_p.add_argument("-p", "--param", action="append", default=[],
+                       metavar="KEY=VALUE", help="scenario parameter")
+    run_p.add_argument("--store", default=None, help="ProfileStore directory")
+    run_p.add_argument("--no-emulate", action="store_true",
+                       help="generate + predict only")
+    run_p.add_argument("--per-sample", action="store_true",
+                       help="force the legacy per-sample replay path")
+    run_p.add_argument("--json", action="store_true")
+
+    fl = sub.add_parser("fleet", help="replay a batch of scenarios")
+    fl.add_argument("job", nargs="+",
+                    metavar="NAME[:k=v,k=v]", help="scenario job spec")
+    fl.add_argument("--executor", choices=("thread", "process"),
+                    default="thread")
+    fl.add_argument("--workers", type=int, default=4)
+    fl.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="give each process worker an N-device mesh "
+                         "(process executor only)")
+    fl.add_argument("--store", default=None, help="ProfileStore directory")
+    fl.add_argument("--json", action="store_true")
+
+    args = ap.parse_args(argv)
+    if args.cmd == "fleet" and args.mesh and args.executor != "process":
+        ap.error("--mesh requires --executor process "
+                 "(threads cannot own per-worker meshes)")
+    return {"list": _cmd_list, "run": _cmd_run, "fleet": _cmd_fleet}[args.cmd](args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -72,21 +72,31 @@ class FleetResult:
 def run_fleet(jobs: Sequence[Tuple[str, Dict]], *,
               store: Optional[ProfileStore] = None,
               hw: HardwareSpec = TPU_V5E,
+              specs: Optional[Sequence[HardwareSpec]] = None,
               emulator: Optional[Emulator] = None,
-              max_workers: int = 4, fused: bool = True) -> FleetResult:
+              max_workers: int = 4, fused: bool = True,
+              executor: str = "thread", mesh_spec=None) -> FleetResult:
     """Synthesize a fleet of scenarios and replay it concurrently.
 
     ``jobs`` is a sequence of (scenario_name, params) pairs.  Profiles are
-    generated and predicted up front, then handed to ``emulate_many`` so the
-    shared plan cache dedups identical (atom, amount) plans fleet-wide;
-    profiles are stored only after emulation so the persisted meta carries
-    ``emulated_ttc_s`` exactly like single ``run_scenario`` calls.
+    generated and predicted up front (across ``specs``, forwarded to each
+    ``run_scenario`` call — defaulting to ``DEFAULT_SPECS``), then handed
+    to ``emulate_many`` so the shared plan cache dedups identical
+    (atom, amount) plans fleet-wide; profiles are stored only after
+    emulation so the persisted meta carries ``emulated_ttc_s`` exactly
+    like single ``run_scenario`` calls.
+
+    ``executor``/``mesh_spec`` select the fleet backend: worker threads in
+    this process (default) or a ``repro.fleet.ProcessFleet`` of worker
+    processes, each with its own emulator and — given a ``MeshSpec`` —
+    its own mesh, so scenarios with collective legs execute them.
     """
-    results = [run_scenario(name, emulate=False, **params)
+    results = [run_scenario(name, emulate=False, specs=specs, **params)
                for name, params in jobs]
     em = emulator or Emulator()
     fleet = em.emulate_many([r.profile for r in results],
-                            max_workers=max_workers, fused=fused)
+                            max_workers=max_workers, fused=fused,
+                            executor=executor, mesh_spec=mesh_spec)
     for r, rep in zip(results, fleet.reports):
         r.report = rep
         r.profile.meta["emulated_ttc_s"] = rep.ttc_s

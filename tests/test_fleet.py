@@ -1,0 +1,212 @@
+"""Process-level fleet executor (ISSUE 3 contracts).
+
+Fast tests pin the serialization layer in-process: detach/rehydrate and
+``ScheduleBundle`` pickling are bit-identical round-trips, emulator/atom
+specs rebuild equivalent emulators, and ``keep_collectives`` controls
+whether wire-byte runs lower to executable barrier steps.
+
+Process tests (marked ``slow`` + ``subproc`` — deselect with
+``-m "not slow"`` while iterating) pin the executor: a process fleet
+reports consumed totals bit-identical to in-process fused replay for every
+profile, collective legs execute on per-worker meshes (nonzero collective
+dispatches — the first fleet mode where they do), worker death mid-run is
+survived with every bundle still reported, and a poison bundle fails the
+run instead of hanging it.
+"""
+import os
+import pickle
+import signal
+
+import numpy as np
+import pytest
+
+from repro.core import (BarrierStep, Emulator, FusedSegment, ResourceVector,
+                        Sample, SynapseProfile, rehydrate_schedule)
+from repro.fleet import (MeshSpec, ProcessFleet, ScheduleBundle, WorkerSpec,
+                         bundle_profile)
+from repro.scenarios import generate
+
+TILE = 64                  # 1 compute iter = 2*64^3  = 524288 flops
+BLOCK = 1 << 18            # 1 memory  iter = 2*2^18  = 524288 bytes
+FPI = 2.0 * TILE ** 3
+BPI = 2.0 * BLOCK
+
+
+def _em(**kw):
+    return Emulator(compute_tile=TILE, mem_block=BLOCK, **kw)
+
+
+def _rv(flops=0.0, hbm=0.0, sw=0.0, sr=0.0, ici=0.0):
+    return ResourceVector(flops=flops, hbm_bytes=hbm,
+                          storage_write_bytes=sw, storage_read_bytes=sr,
+                          ici_bytes={"all-reduce": ici} if ici else {})
+
+
+def _profile(rvs, command="fleet-test"):
+    return SynapseProfile(command=command,
+                          samples=[Sample(index=i, resources=r)
+                                   for i, r in enumerate(rvs)])
+
+
+def _mixed(tag, ici=0.0):
+    """Compute/memory runs split by a storage barrier (and an ici leg)."""
+    return _profile([_rv(flops=FPI, hbm=BPI), _rv(flops=2 * FPI),
+                     _rv(flops=FPI, sw=2 << 20, sr=1 << 20),
+                     _rv(flops=FPI, ici=ici),
+                     _rv(hbm=2 * BPI)], command=f"fleet-test:{tag}")
+
+
+# ---------------------------------------------------------------------------
+# serialization layer (fast, in-process)
+# ---------------------------------------------------------------------------
+
+def test_schedule_detach_rehydrate_pickle_roundtrip():
+    em = _em()
+    sched = em.compile(_mixed("rt", ici=4e6), keep_collectives=True)
+    back = rehydrate_schedule(pickle.loads(pickle.dumps(sched.detach())))
+    assert [type(s) for s in back.steps] == [type(s) for s in sched.steps]
+    # barrier around the storage leg AND the collective leg
+    assert sum(isinstance(s, BarrierStep) for s in back.steps) == 2
+    for a, b in zip(sched.steps, back.steps):
+        if isinstance(a, FusedSegment):
+            np.testing.assert_array_equal(a.table, b.table)
+            assert a.rows == b.rows                    # bit-identical floats
+        else:
+            assert a.resources == b.resources and a.count == b.count
+
+
+def test_bundle_profile_pickles_and_replays_identically(tmp_path):
+    em = _em()
+    em.storage.dir = str(tmp_path)
+    prof = _mixed("bundle")
+    try:
+        ref = em.emulate(prof, fused=True)
+        bundle = pickle.loads(pickle.dumps(bundle_profile(em, prof)))
+        assert bundle.command == prof.command
+        assert bundle.n_profile_samples == len(prof.samples)
+        assert bundle.planned == prof.totals
+        rep = em.replay(bundle.rehydrate(), command=bundle.command)
+    finally:
+        em.storage.cleanup()
+    assert rep.consumed == ref.consumed == prof.totals
+    assert rep.n_samples == ref.n_samples
+
+
+def test_rehydrate_rejects_bad_payloads():
+    with pytest.raises(ValueError):
+        rehydrate_schedule({"version": 99, "steps": []})
+    with pytest.raises(ValueError):
+        rehydrate_schedule("not a payload")
+    with pytest.raises(ValueError):
+        rehydrate_schedule({"version": 1, "steps": [{"kind": "wat"}]})
+
+
+def test_emulator_spec_roundtrips_through_pickle(tmp_path):
+    em = _em(efficiency=0.5, speed=2.0)
+    spec = pickle.loads(pickle.dumps(em.spec()))
+    em2 = spec.build()
+    assert em2.compute.tile == TILE and em2.compute.efficiency == 0.5
+    assert em2.memory.block_bytes == BLOCK and em2.speed == 2.0
+    assert em2.calib == em.calib                 # no re-calibration drift
+    assert em2.collective is None
+    prof = _profile([_rv(flops=4 * FPI, hbm=2 * BPI), _rv(flops=2 * FPI)])
+    assert em2.emulate(prof).consumed == em.emulate(prof).consumed
+
+
+def test_keep_collectives_lowers_wire_runs_to_barriers():
+    em = _em()                                   # no mesh in this process
+    prof = _profile([_rv(flops=FPI), _rv(flops=FPI, ici=4e6), _rv(hbm=BPI)])
+    folded = em.compile(prof)                    # default: nothing executes
+    assert [type(s) for s in folded.steps] == [FusedSegment]
+    kept = em.compile(prof, keep_collectives=True)
+    assert [type(s) for s in kept.steps] == \
+        [FusedSegment, BarrierStep, FusedSegment]
+    # both account the same totals
+    assert em.replay(folded, command="f").consumed == \
+        em.replay(kept, command="k").consumed == prof.totals
+
+
+def test_mesh_spec_validates_and_counts_devices():
+    assert MeshSpec(shape=(2, 4), axes=("data", "model")).device_count == 8
+    with pytest.raises(ValueError):
+        MeshSpec(shape=(2, 4), axes=("model",))
+    with pytest.raises(ValueError):
+        MeshSpec(shape=(), axes=())
+
+
+def test_process_executor_rejects_per_sample_path():
+    em = _em()
+    with pytest.raises(ValueError):
+        em.emulate_many([_mixed("x")], executor="process", fused=False)
+    with pytest.raises(ValueError):
+        em.emulate_many([_mixed("x")], executor="carrier-pigeon")
+    # a mesh on the thread executor would be silently dropped — refuse it
+    with pytest.raises(ValueError, match="process"):
+        em.emulate_many([_mixed("x")], executor="thread",
+                        mesh_spec=MeshSpec(shape=(2,), axes=("model",)))
+
+
+# ---------------------------------------------------------------------------
+# process executor (spawns real workers)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.subproc
+def test_process_fleet_bit_identical_and_collectives_execute():
+    """The ISSUE 3 acceptance contract: a mixed_fleet job set replayed by
+    the process executor consumes bit-identical totals per profile, and a
+    profile with a collective leg issues collective dispatches on the
+    workers' own meshes."""
+    em = _em()
+    profiles = [generate("mixed_fleet", total_samples=6, seed=1),
+                generate("mixed_fleet", total_samples=6, seed=2),
+                generate("training_scan", n_steps=4, ckpt_every=2,
+                         flops_per_step=4e7, hbm_per_step=2e6,
+                         ckpt_bytes=2 << 20),
+                _mixed("coll", ici=4e6)]
+    refs = [em.emulate(p, fused=True) for p in profiles]
+    em.storage.cleanup()
+    fleet = em.emulate_many(profiles, max_workers=2, executor="process",
+                            mesh_spec=MeshSpec(shape=(2,), axes=("model",)))
+    assert fleet.n_profiles == len(profiles)
+    assert fleet.max_workers == 2
+    assert fleet.cache_stats["worker_deaths"] == 0
+    for ref, rep in zip(refs, fleet.reports):
+        assert rep.mode == "fused"
+        assert rep.consumed == ref.consumed          # bit-identical
+        assert rep.n_samples == ref.n_samples
+    coll = fleet.reports[-1]
+    assert coll.consumed.ici_total == 4e6
+    assert coll.n_collective_dispatches > 0          # it really executed
+    # fleet summary surfaces the new I/O fields
+    s = coll.summary()
+    assert s["ici_bytes"] == 4e6 and "storage_read_bytes" in s
+
+
+@pytest.mark.slow
+@pytest.mark.subproc
+def test_process_fleet_survives_worker_death_and_reports_errors():
+    em = _em()
+    bundles = [bundle_profile(em, _mixed(i)) for i in range(6)]
+    with ProcessFleet(2, WorkerSpec(emulator=em.spec())) as pf:
+        pf.warmup()
+        os.kill(pf.pids[0], signal.SIGKILL)          # one worker dies
+        reports = pf.run(bundles)
+        assert len(reports) == len(bundles)          # nothing lost
+        assert pf.worker_deaths >= 1
+        ref = em.emulate(_mixed(0), fused=True)
+        em.storage.cleanup()
+        assert all(r.consumed == ref.consumed for r in reports)
+        # a malformed bundle is a loud failure, not a hang — and the
+        # worker survives it.  Good bundles are in flight when the run
+        # raises, so the follow-up run also proves a raised run's
+        # stragglers neither leak into the next run's results nor
+        # permanently occupy their workers.
+        bad = ScheduleBundle(command="bad", payload={"version": 99})
+        with pytest.raises(RuntimeError, match="bad"):
+            pf.run([bad] + bundles)
+        again = pf.run(bundles[:2])                  # pool still serves
+        assert [r.command for r in again] == \
+            [b.command for b in bundles[:2]]
+        assert [r.consumed for r in again] == \
+            [r.consumed for r in reports[:2]]

@@ -7,11 +7,15 @@ round-trips through the ProfileStore under its scenario tags.  Fleet
 contract: ``emulate_many`` preserves per-profile consumption totals while
 building strictly fewer plans than K independent replays.
 """
+import json
+
 import pytest
 
 from repro.core import Emulator, PlanCache, ProfileStore
+from repro.core.hardware import HOST_I7_M620, TPU_V5E
 from repro.scenarios import (generate, get_scenario, list_scenarios,
-                             run_scenario, validate)
+                             run_fleet, run_scenario, validate)
+from repro.scenarios.__main__ import main as cli_main
 
 EXPECTED = {"training_scan", "serving_traffic", "fanout_straggler",
             "retry_storm", "mixed_fleet"}
@@ -179,6 +183,55 @@ def test_emulate_many_matches_single_and_shares_plans():
     assert stats["plans_built"] == per_profile_plans
     assert stats["plans_built"] < k * per_profile_plans
     assert stats["hits"] >= (k - 1) * per_profile_plans
+
+
+def test_run_fleet_forwards_specs():
+    """Regression: fleet-mode predictions were silently pinned to
+    DEFAULT_SPECS because ``specs`` never reached ``run_scenario``."""
+    jobs = [("fanout_straggler", dict(n_workers=3, work_flops=5e7,
+                                      work_hbm=4e7, jitter=0.0))]
+    out = run_fleet(jobs, specs=[HOST_I7_M620], max_workers=1)
+    assert set(out.results[0].predictions) == {HOST_I7_M620.name}
+    # and the default is still the full compare set
+    out = run_fleet(jobs, max_workers=1)
+    assert TPU_V5E.name in out.results[0].predictions
+
+
+# ---------------------------------------------------------------------------
+# CLI: python -m repro.scenarios list|run|fleet
+# ---------------------------------------------------------------------------
+
+def test_cli_list(capsys):
+    assert cli_main(["list"]) == 0
+    out = capsys.readouterr().out
+    for name in EXPECTED:
+        assert name in out
+
+
+def test_cli_run_json(capsys, tmp_path):
+    rc = cli_main(["run", "fanout_straggler", "-p", "n_workers=3",
+                   "-p", "work_flops=5e7", "-p", "work_hbm=4e7",
+                   "--store", str(tmp_path), "--json"])
+    assert rc == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["scenario"] == "fanout_straggler"
+    assert payload["n_samples"] == 3
+    assert payload["report"]["mode"] == "fused"
+    assert ProfileStore(str(tmp_path)).find({"scenario": "fanout_straggler"})
+
+
+def test_cli_fleet_threads(capsys):
+    rc = cli_main(["fleet", "fanout_straggler:n_workers=3,work_flops=5e7,"
+                   "work_hbm=4e7", "--workers", "2"])
+    assert rc == 0
+    assert "fanout_straggler" in capsys.readouterr().out
+
+
+def test_cli_rejects_bad_input(capsys):
+    with pytest.raises(SystemExit):
+        cli_main(["run", "fanout_straggler", "-p", "nonsense"])
+    with pytest.raises(SystemExit):   # --mesh needs the process executor
+        cli_main(["fleet", "fanout_straggler", "--mesh", "2"])
 
 
 def test_emulate_many_with_storage_leg(tmp_path):
