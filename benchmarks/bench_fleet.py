@@ -1,6 +1,6 @@
-"""Fleet executor benchmark: thread vs process fleet, cold vs warm workers.
+"""Fleet executor benchmark: thread vs process vs remote, cold vs warm.
 
-Replays the same mixed fleet three ways and reports where the process
+Replays the same mixed fleet several ways and reports where each
 executor's costs live:
 
   * ``thread_wall_s``   — in-process thread fleet (the PR 1/2 baseline),
@@ -10,26 +10,51 @@ executor's costs live:
                           spawn + jax import time is reported separately
                           as ``spawn_s``);
   * ``process_warm_s``  — the same pool again: pure replay + IPC, the
-                          steady-state cost a long-lived fleet pays.
+                          steady-state cost a long-lived fleet pays;
+  * ``remote_warm_s``   — the same bundles through the full network
+                          stack: loopback TCP to ``repro.fleet.agent``
+                          subprocesses (one worker each), so
+                          ``framing_overhead`` = remote_warm /
+                          process_warm isolates what the length-prefixed
+                          pickle framing + agent proxy hop add over a raw
+                          ``Pipe`` (agent join/spawn cost is
+                          ``remote_join_s``).
 
 The regression guards are deliberately loose — this container's wall-clock
-ratios swing ~2x run-to-run (see bench_dispatch) — and the hard assert is
-correctness, which is noise-free: every process-fleet report must consume
-totals bit-identical to the in-process replay.  The warm-pool guard
-catches the failure mode that matters architecturally: workers re-tracing
-per bundle instead of once per process would push warm replay toward cold
-time and far past the bound.
+ratios swing ~2x run-to-run (see bench_dispatch) — and the remote scenario
+has NO wall-clock gate at all: the hard assert is correctness, which is
+noise-free — every process- and remote-fleet report must consume totals
+bit-identical to the in-process replay.  The warm-pool guard catches the
+failure mode that matters architecturally: workers re-tracing per bundle
+instead of once per process would push warm replay toward cold time and
+far past the bound.
 """
 from __future__ import annotations
 
+import os
+import subprocess
+import sys
 import time
 
 from benchmarks.common import emit
 from repro.core import Emulator, PlanCache
-from repro.fleet import ProcessFleet, WorkerSpec, bundle_profile
+from repro.fleet import (ProcessFleet, RemoteFleet, WorkerSpec,
+                         bundle_profile)
 from repro.scenarios import generate
 
 WORKERS = 2
+
+
+def _spawn_agents(port: int, n: int):
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    old = env.get("PYTHONPATH", "")
+    env["PYTHONPATH"] = src + (os.pathsep + old if old else "")
+    return [subprocess.Popen(
+        [sys.executable, "-m", "repro.fleet.agent",
+         "--connect", f"127.0.0.1:{port}", "--workers", "1"],
+        env=env) for _ in range(n)]
 
 
 def fleet_profiles(k: int):
@@ -81,11 +106,40 @@ def main(fast: bool = False):
                 warm_s, warm_reports = dt, r
     finally:
         fleet.close()
+
+    # -- remote scenario: same bundles over loopback TCP agents ------------
+    remote = RemoteFleet(WorkerSpec(emulator=em.spec()),
+                         listen="127.0.0.1:0", agents=WORKERS)
+    procs = _spawn_agents(remote.bound_addr[1], WORKERS)
+    try:
+        t0 = time.perf_counter()
+        remote.warmup(timeout=300.0)
+        remote_join_s = time.perf_counter() - t0
+
+        remote.run(bundles)                    # agents trace once (cold)
+        remote_warm_s = float("inf")
+        remote_reports = None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            r = remote.run(bundles)
+            dt = time.perf_counter() - t0
+            if dt < remote_warm_s:
+                remote_warm_s, remote_reports = dt, r
+    finally:
+        remote.close()
+        for p in procs:
+            try:
+                p.wait(timeout=30.0)
+            except subprocess.TimeoutExpired:
+                p.kill()
     em.storage.cleanup()
 
     identical = all(
         pr.consumed == tr.consumed and pr.n_samples == tr.n_samples
         for pr, tr in zip(warm_reports, thread_fleet.reports))
+    remote_identical = all(
+        rr.consumed == tr.consumed and rr.n_samples == tr.n_samples
+        for rr, tr in zip(remote_reports, thread_fleet.reports))
     rows = [{
         "k_profiles": k,
         "workers": WORKERS,
@@ -95,12 +149,22 @@ def main(fast: bool = False):
         "process_warm_s": warm_s,
         "warm_vs_thread": warm_s / thread_s if thread_s else 0.0,
         "cold_vs_warm": cold_s / warm_s if warm_s else 0.0,
+        "remote_agents": WORKERS,
+        "remote_join_s": remote_join_s,
+        "remote_warm_s": remote_warm_s,
+        "framing_overhead": remote_warm_s / warm_s if warm_s else 0.0,
         "worker_deaths": fleet.worker_deaths,
+        "agent_deaths": remote.worker_deaths,
         "consumed_identical": identical,
+        "remote_consumed_identical": remote_identical,
     }]
     emit("fleet", rows)
     assert identical, \
         "process-fleet totals must be bit-identical to in-process replay"
+    # correctness only for the network hop — framing_overhead is reported,
+    # not gated (container wall-clock swings ~2x run-to-run)
+    assert remote_identical, \
+        "remote-fleet totals must be bit-identical to in-process replay"
     # Loose guards only (2x run-to-run noise): warm process replay must be
     # in the same decade as the thread fleet — re-tracing per bundle would
     # be orders of magnitude off — and an absolute floor keeps tiny fast

@@ -34,6 +34,7 @@ from __future__ import annotations
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FuturesTimeout
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -47,6 +48,10 @@ from repro.core.hardware import HardwareSpec
 from repro.core.metrics import ResourceVector, Sample, SynapseProfile
 from repro.core.schedule import (CompiledSchedule, FusedSegment,
                                  SegmentRunner, compile_schedule)
+
+#: fleet backends ``emulate_many``/``run_fleet`` accept (see ``repro.fleet``
+#: for the decision matrix)
+VALID_EXECUTORS = ("thread", "process", "remote")
 
 
 @dataclass
@@ -360,8 +365,9 @@ class Emulator:
                      max_workers: int = 4, flops_scale: float = 1.0,
                      storage_scale: float = 1.0, mem_scale: float = 1.0,
                      verify: bool = True, fused: bool = True,
-                     executor: str = "thread",
-                     mesh_spec=None) -> FleetReport:
+                     executor: str = "thread", mesh_spec=None,
+                     hosts=None, listen=None, agents=None,
+                     timeout: float = 600.0) -> FleetReport:
         """Fleet mode: replay many profiles concurrently.
 
         ``executor="thread"`` (default) runs every profile on worker
@@ -376,7 +382,18 @@ class Emulator:
         emulator, jitted programs, and — when ``mesh_spec`` (a
         ``repro.fleet.MeshSpec``) is given — its own device mesh, so
         collective legs *execute* in fleet mode instead of being dropped.
-        See ``repro.fleet`` for the thread-vs-process decision matrix.
+        ``executor="remote"`` ships the same bundles over framed TCP to
+        host agents on other machines (``repro.fleet.RemoteFleet``):
+        ``hosts=["h1:9000", ...]`` dials agents already listening
+        (``python -m repro.fleet.agent --listen``), ``listen="host:port"``
+        + ``agents=N`` accepts N dial-in agents
+        (``agent --connect``) — mix freely.  See ``repro.fleet`` for the
+        full thread/process/remote decision matrix.
+
+        ``timeout`` bounds each fleet run.  Process and remote executors
+        enforce it strictly (the scheduler deadline); the thread executor
+        stops *starting* profiles at the deadline and raises, but profiles
+        already replaying run to completion — threads can't be preempted.
 
         Each profile replays on exactly one worker, so the per-profile
         sample-ordering contract is intact; ordering *across* profiles is
@@ -384,25 +401,41 @@ class Emulator:
         dependencies).  The pool is capped at ``len(profiles)`` so tiny
         fleets don't spawn idle workers.
         """
-        if executor == "process":
+        if executor not in VALID_EXECUTORS:
+            raise ValueError(
+                f"unknown executor {executor!r}; valid choices: "
+                + ", ".join(repr(e) for e in VALID_EXECUTORS))
+        if executor != "remote" and (hosts is not None or listen is not None
+                                     or agents is not None):
+            raise ValueError("hosts/listen/agents configure "
+                             "executor='remote' agents; they have no "
+                             f"meaning for executor={executor!r}")
+        if executor in ("process", "remote"):
             if not (fused and self._fusable):
-                raise ValueError("executor='process' ships compiled "
+                raise ValueError(f"executor={executor!r} ships compiled "
                                  "schedules and requires the fused jnp "
                                  "replay path (fused=True, backend='jnp')")
+            if executor == "remote":
+                from repro.fleet.transport.remote import run_remote_fleet
+                return run_remote_fleet(self, profiles, hosts=hosts,
+                                        listen=listen, agents=agents,
+                                        mesh_spec=mesh_spec,
+                                        flops_scale=flops_scale,
+                                        storage_scale=storage_scale,
+                                        mem_scale=mem_scale, verify=verify,
+                                        timeout=timeout)
             from repro.fleet.executor import run_process_fleet
             return run_process_fleet(self, profiles, max_workers=max_workers,
                                      mesh_spec=mesh_spec,
                                      flops_scale=flops_scale,
                                      storage_scale=storage_scale,
-                                     mem_scale=mem_scale, verify=verify)
-        if executor != "thread":
-            raise ValueError(f"unknown executor {executor!r}; "
-                             "expected 'thread' or 'process'")
+                                     mem_scale=mem_scale, verify=verify,
+                                     timeout=timeout)
         if mesh_spec is not None:
-            raise ValueError("mesh_spec requires executor='process': "
-                             "thread workers share one jax client and "
-                             "cannot own per-worker meshes, so the "
-                             "collective legs it asks for would be "
+            raise ValueError("mesh_spec requires executor='process' or "
+                             "'remote': thread workers share one jax "
+                             "client and cannot own per-worker meshes, so "
+                             "the collective legs it asks for would be "
                              "silently dropped")
         workers = max(1, min(max_workers, len(profiles)))
         # One fleet at a time per emulator: the atoms, ephemeral cache
@@ -420,6 +453,7 @@ class Emulator:
             before = cache.stats()
             try:
                 t0 = time.perf_counter()
+                deadline = time.monotonic() + timeout
                 with ThreadPoolExecutor(max_workers=workers) as pool:
                     futures = [pool.submit(self.emulate, p,
                                            flops_scale=flops_scale,
@@ -427,7 +461,21 @@ class Emulator:
                                            mem_scale=mem_scale, verify=verify,
                                            fused=fused)
                                for p in profiles]
-                    reports = [f.result() for f in futures]
+                    reports = []
+                    for f in futures:
+                        left = deadline - time.monotonic()
+                        try:
+                            reports.append(f.result(timeout=max(0.0, left)))
+                        except FuturesTimeout:
+                            unfinished = sum(1 for g in futures
+                                             if not g.done())
+                            for g in futures:
+                                g.cancel()       # queued ones never start
+                            raise TimeoutError(
+                                f"fleet run exceeded {timeout}s with "
+                                f"{unfinished} profile(s) unfinished "
+                                "(in-flight thread replays drain before "
+                                "this raises)") from None
                 wall = time.perf_counter() - t0
             finally:
                 if ephemeral:

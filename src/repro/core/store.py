@@ -82,15 +82,15 @@ class ProfileStore:
             return []
         return self._load_runs(ent)
 
+    def _load_run(self, run: Dict) -> SynapseProfile:
+        doc = ""
+        for chunk in run["chunks"]:
+            with open(os.path.join(self.root, chunk)) as f:
+                doc += f.read()
+        return SynapseProfile.from_json(doc)
+
     def _load_runs(self, ent: Dict) -> List[SynapseProfile]:
-        out = []
-        for run in ent["runs"]:
-            doc = ""
-            for chunk in run["chunks"]:
-                with open(os.path.join(self.root, chunk)) as f:
-                    doc += f.read()
-            out.append(SynapseProfile.from_json(doc))
-        return out
+        return [self._load_run(run) for run in ent["runs"]]
 
     def latest(self, command: str, tags=None) -> Optional[SynapseProfile]:
         profiles = self.query(command, tags)
@@ -102,16 +102,34 @@ class ProfileStore:
 
         Cross-key lookup the exact-(command, tags) ``query`` can't do: e.g.
         every stored run with ``{"scenario": "serving_traffic"}`` regardless
-        of the parameter tags it was generated with.
+        of the parameter tags it was generated with.  Eager form of
+        ``stream`` — prefer ``stream`` when the result set may be large.
+        """
+        return list(self.stream(tags, command))
+
+    def stream(self, tags: Optional[Dict[str, str]] = None,
+               command: Optional[str] = None):
+        """Lazily yield stored profiles one at a time, oldest run first
+        within each key (superset tag match, like ``find``; no filter
+        streams the whole store).
+
+        This is the fleet-feeding path: ``run_fleet(profiles=
+        store.stream(tags))`` (or ``repro.scenarios fleet --from-store``)
+        replays a store's worth of captured profiles without
+        materializing every document up front — the first step toward
+        replay-the-production-day fleets that outsize memory.  The index
+        is snapshotted once at the first ``next()``; runs added
+        afterwards appear in the next ``stream`` call.
         """
         idx = self._load_index()
-        out = []
         for _, ent in sorted(idx.items()):
             if command is not None and ent["command"] != command:
                 continue
-            if all(ent["tags"].get(k) == v for k, v in tags.items()):
-                out.extend(self._load_runs(ent))
-        return out
+            if not all(ent["tags"].get(k) == v
+                       for k, v in (tags or {}).items()):
+                continue
+            for run in ent["runs"]:
+                yield self._load_run(run)
 
     def keys(self) -> List[Dict]:
         idx = self._load_index()

@@ -1,46 +1,62 @@
-"""Process-level fleet execution: past the thread/GIL ceiling.
+"""Fleet execution past the thread/GIL ceiling — and past the host.
 
 ``Emulator.emulate_many`` replays a fleet of profiles concurrently; this
-package supplies its ``executor="process"`` backend.  The schedule compiler
-made the split cheap: a ``CompiledSchedule`` is plain numpy iteration
-tables + resource vectors, so the parent compiles once, detaches each
-schedule into a picklable ``ScheduleBundle``, and ships it to a pool of
-spawn-based worker processes (``ProcessFleet``).  Each worker builds its
-own ``Emulator`` + ``SegmentRunner`` exactly once — its own jax client,
-its own jitted programs, its own plan cache, and (given a ``MeshSpec``)
-its own device mesh — then replays bundles fused and streams back
+package supplies its ``executor="process"`` and ``executor="remote"``
+backends.  The schedule compiler made the split cheap: a
+``CompiledSchedule`` is plain numpy iteration tables + resource vectors,
+so the parent compiles once, detaches each schedule into a picklable
+``ScheduleBundle``, and ships it — over a ``Pipe`` to a pool of
+spawn-based worker processes (``ProcessFleet``), or over framed TCP to
+host agents on other machines (``RemoteFleet`` +
+``python -m repro.fleet.agent``).  Each worker builds its own
+``Emulator`` + ``SegmentRunner`` exactly once — its own jax client, its
+own jitted programs, its own plan cache, and (given a ``MeshSpec``) its
+own device mesh — then replays bundles fused and streams back
 ``EmulationReport``s whose consumed totals are bit-identical to an
-in-process replay of the same profile.
+in-process replay of the same profile.  Both executors share one
+transport-agnostic scheduler (``executor.FleetBase``): the same attempt
+budget, poison-bundle cap, and reap-requeue-refill recovery whether the
+dead peer was a process or a TCP connection.
 
-Thread vs process executor — decision matrix:
+Thread vs process vs remote executor — decision matrix:
 
-  =====================  =======================  =========================
-  dimension              executor="thread"        executor="process"
-  =====================  =======================  =========================
-  parallelism ceiling    one GIL + one jax        one jax client *per
-                         client; scales until     worker*; scales with
-                         dispatch serializes      cores/hosts
-  per-fleet overhead     ~zero (shared pool)      worker spawn + jax import
-                                                  + trace, ONCE per worker
-                                                  (keep the pool warm)
-  plan/program sharing   fleet-wide PlanCache     per-worker cache; programs
-                         + shared SegmentRunner   traced once per worker
-  collectives            dropped (no per-thread   EXECUTE: each worker owns
-                         mesh is possible)        a mesh built from MeshSpec
-  failure isolation      a crash takes the        worker death is reaped,
-                         whole fleet down         bundle re-queued, pool
-                                                  refilled
-  best for               small fleets, tiny       large fleets, collective
-                         profiles, tests          legs, saturating a host
-  =====================  =======================  =========================
+  ==================  ====================  ====================  =====================
+  dimension           executor="thread"     executor="process"    executor="remote"
+  ==================  ====================  ====================  =====================
+  parallelism         one GIL + one jax     one jax client *per   one jax client per
+  ceiling             client; scales until  worker*; scales       worker per *host*;
+                      dispatch serializes   with cores            scales with machines
+  per-fleet           ~zero (shared pool)   worker spawn + jax    agent join + spawn/
+  overhead                                  import + trace, ONCE  trace per host, ONCE;
+                                            per worker (keep      then framed-TCP
+                                            the pool warm)        pickle per bundle
+  plan/program        fleet-wide PlanCache  per-worker cache;     per-worker cache on
+  sharing             + shared              programs traced once  each host
+                      SegmentRunner         per worker
+  collectives         dropped (no           EXECUTE: each worker  EXECUTE: per-worker
+                      per-thread mesh is    owns a mesh built     meshes on every host
+                      possible)             from MeshSpec         (per-agent MeshSpec)
+  failure             a crash takes the     worker death reaped,  agent death reaped the
+  isolation           whole fleet down      bundle re-queued,     same way; bundles
+                                            pool refilled         requeue onto surviving
+                                                                  hosts, late agents can
+                                                                  join mid-run
+  best for            small fleets, tiny    large fleets,         fleets bigger than one
+                      profiles, tests       collective legs,      machine; real TPU
+                                            saturating a host     hosts joining later
+  ==================  ====================  ====================  =====================
 
 Rule of thumb: threads while the fleet is small enough that one process's
 dispatch throughput isn't the bottleneck; processes when it is, when the
-profiles carry collective legs, or when worker isolation matters.  This is
-also the stepping stone to multi-host scale-out — a ``ScheduleBundle`` that
-crosses a process boundary crosses a network boundary just as easily.
+profiles carry collective legs, or when worker isolation matters; remote
+when one machine isn't enough (or the workers must be *other* machines —
+the paper's heterogeneous-resource pitch).  The remaining hop is real
+``jax.distributed`` TPU workers: an agent whose WorkerSpec carries a
+multi-host mesh instead of a forced-host-device one.
 """
 from repro.fleet.bundle import (MeshSpec, ScheduleBundle,  # noqa: F401
                                 WorkerSpec, bundle_profile)
-from repro.fleet.executor import (ProcessFleet,  # noqa: F401
-                                  run_process_fleet)
+from repro.fleet.executor import (FleetBase, Peer, PeerGone,  # noqa: F401
+                                  ProcessFleet, run_process_fleet)
+from repro.fleet.transport.remote import (RemoteFleet,  # noqa: F401
+                                          run_remote_fleet)

@@ -1,0 +1,203 @@
+"""Fleet host agent: lend this machine's workers to a remote coordinator.
+
+    python -m repro.fleet.agent --connect COORD_HOST:PORT --workers 4
+    python -m repro.fleet.agent --listen 0.0.0.0:9000     --workers 4
+
+The agent is the host-side half of ``repro.fleet.transport``: it opens
+one framed TCP connection to a coordinator (dialing out with
+``--connect``, or with ``--listen`` waiting for the coordinator to dial
+in — print-and-flushes its bound address first, so launchers can scrape
+the port when asked for ``:0``).  After the handshake it receives the
+fleet's ``WorkerSpec``, spawns ``--workers`` local worker processes from
+it (a plain ``ProcessFleet`` — same spawn path, same XLA device-count
+environment dance, same per-worker mesh build), reports ready with its
+slot count, and then proxies: coordinator bundles are dispatched to idle
+local workers, worker reports stream back tagged with the coordinator's
+dispatch epoch.
+
+Local worker death is *not* hidden: the agent respawns within its budget
+like any ``ProcessFleet``, but the orphaned bundle goes back to the
+coordinator as a ``retry`` so the fleet-wide attempt/poison accounting
+stays in one place.  If the agent runs out of live workers it returns
+every queued bundle and exits; the coordinator reaps the closed
+connection like a dead process worker.  The agent exits when the
+coordinator says ``stop`` or its connection drops — it never outlives
+the fleet it joined.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import socket
+import sys
+import traceback
+from collections import deque
+from multiprocessing import connection as mp_conn
+from typing import List, Optional
+
+from repro.fleet.transport import framing
+from repro.fleet.transport.remote import _IO_TIMEOUT, parse_addr
+
+
+def log(msg: str) -> None:
+    print(f"[fleet-agent pid={os.getpid()}] {msg}", flush=True)
+
+
+def serve(sock: socket.socket, n_workers: int) -> int:
+    """Run the agent protocol on an established coordinator connection."""
+    sock.settimeout(_IO_TIMEOUT)
+    framing.handshake(sock)
+    msg = framing.recv_frame(sock)
+    if not (isinstance(msg, tuple) and msg and msg[0] == "spec"):
+        raise framing.FramingError(
+            f"expected a ('spec', WorkerSpec) frame first, got {msg!r}")
+    spec = msg[1]
+    from repro.fleet.executor import PeerGone, ProcessFleet
+
+    log(f"spawning {n_workers} local worker(s)"
+        + (f" with mesh {list(spec.mesh.shape)}" if spec.mesh else ""))
+    try:
+        fleet = ProcessFleet(n_workers, spec)
+        infos = fleet.warmup()
+    except BaseException:
+        framing.send_frame(sock, ("err", None, None, traceback.format_exc()))
+        raise
+    framing.send_frame(sock, ("ready", {
+        "workers": len(fleet.pids), "host": socket.gethostname(),
+        "agent_pid": os.getpid(), "worker_infos": infos}))
+    log(f"ready: {len(fleet.pids)} worker(s) warm, serving")
+
+    pending = deque()          # (epoch, idx, bundle) awaiting a free worker
+    stopping = False
+    served = 0
+
+    def reap_local(peer):
+        """A local worker died: hand its orphaned bundles back (the
+        coordinator owns the attempt budget, so a bundle that kills
+        workers is *its* poison call, not something to retry here), reap
+        and maybe respawn, and re-advertise the slot count — if the
+        respawn budget is spent the pool shrank for good, and the
+        coordinator must stop filling slots this host no longer has."""
+        for e, idx in list(peer.tasks):
+            framing.send_frame(sock, ("retry", e, idx,
+                                      "agent-local worker died"))
+        peer.tasks.clear()
+        fleet._reap(peer, deque())
+        if fleet._peers:
+            framing.send_frame(sock, ("ready",
+                                      {"workers": len(fleet._peers)}))
+
+    try:
+        while True:
+            in_flight = any(p.tasks for p in fleet._peers)
+            if stopping and not in_flight and not pending:
+                break
+            # -- collect: coordinator frames + local worker replies -------
+            waitables = ([] if stopping else [sock]) + \
+                [p.waitable for p in fleet._peers]
+            for obj in mp_conn.wait(waitables, timeout=0.5):
+                if obj is sock:
+                    msg = framing.recv_frame(sock)
+                    if msg[0] == "stop":
+                        stopping = True
+                    elif msg[0] == "run":
+                        _, epoch, idx, bundle = msg
+                        pending.append((epoch, idx, bundle))
+                    continue
+                peer = next(p for p in fleet._peers if p.waitable is obj)
+                try:
+                    reply = peer.recv()
+                except PeerGone:
+                    reap_local(peer)
+                    continue
+                kind = reply[0]
+                if kind == "ready":
+                    peer.ready = True          # a respawned replacement
+                elif kind == "ok":
+                    _, e, idx, rep = reply
+                    peer.tasks.discard((e, idx))
+                    served += 1
+                    framing.send_frame(sock, ("ok", e, idx, rep))
+                elif kind == "err":
+                    _, e, idx, tb = reply
+                    if idx is None:            # replacement failed init
+                        reap_local(peer)
+                    else:
+                        peer.tasks.discard((e, idx))
+                        framing.send_frame(sock, ("err", e, idx, tb))
+            # -- dispatch queued bundles to free local slots --------------
+            for peer in list(fleet._peers):
+                while pending and peer.free_slots > 0:
+                    if not peer.alive:
+                        reap_local(peer)
+                        break
+                    epoch, idx, bundle = pending.popleft()
+                    try:
+                        peer.dispatch(epoch, idx, bundle)
+                    except PeerGone:
+                        pending.appendleft((epoch, idx, bundle))
+                        reap_local(peer)
+                        break
+            if not fleet._peers:
+                for epoch, idx, _ in pending:
+                    framing.send_frame(sock, ("retry", epoch, idx,
+                                              "agent has no live workers"))
+                pending.clear()
+                log("no live workers left and respawn budget spent — "
+                    "leaving the fleet")
+                return 1
+    except framing.TransportClosed:
+        log("coordinator connection closed — shutting down")
+    finally:
+        fleet.close()
+    log(f"served {served} bundle(s), exiting")
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.fleet.agent",
+        description="Join this machine's emulator workers to a remote "
+                    "fleet coordinator (see repro.fleet.transport)")
+    how = ap.add_mutually_exclusive_group(required=True)
+    how.add_argument("--connect", metavar="HOST:PORT",
+                     help="dial a coordinator listening at HOST:PORT")
+    how.add_argument("--listen", metavar="HOST:PORT",
+                     help="listen at HOST:PORT (port 0 for ephemeral; the "
+                          "bound address is printed) and wait for one "
+                          "coordinator to dial in")
+    ap.add_argument("--workers", type=int, default=1, metavar="N",
+                    help="local worker processes to offer (default 1)")
+    ap.add_argument("--connect-timeout", type=float, default=30.0,
+                    metavar="S", help="dial timeout (default 30s)")
+    args = ap.parse_args(argv)
+    if args.workers < 1:
+        ap.error("--workers must be >= 1")
+
+    if args.connect:
+        addr = parse_addr(args.connect)
+        log(f"connecting to coordinator {addr[0]}:{addr[1]}")
+        sock = socket.create_connection(addr, timeout=args.connect_timeout)
+    else:
+        host, port = parse_addr(args.listen)
+        srv = socket.create_server((host, port), backlog=1)
+        bound = srv.getsockname()
+        # scrapeable by launchers (and tests) that asked for port 0
+        log(f"listening on {bound[0]}:{bound[1]}")
+        sock, peer = srv.accept()
+        srv.close()
+        log(f"coordinator connected from {peer[0]}:{peer[1]}")
+    try:
+        return serve(sock, args.workers)
+    except framing.TransportError as e:
+        log(f"transport failed: {e}")
+        return 1
+    finally:
+        try:
+            sock.close()
+        except OSError:
+            pass
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,20 +1,29 @@
-"""Process-level fleet executor: replay schedule bundles on worker processes.
+"""Fleet executors: replay schedule bundles on pools of remote peers.
 
-``ProcessFleet`` owns a pool of spawn-based worker processes (see
-``repro.fleet.worker``), each with its own jax client, emulator, jitted
-programs, and — when the ``WorkerSpec`` carries a ``MeshSpec`` — its own
-device mesh.  The parent compiles profiles once, detaches them into
-``ScheduleBundle``s, and streams them to whichever worker is idle; workers
-stream back ``EmulationReport``s.  Scheduling is work-stealing-simple:
-one in-flight bundle per worker, next bundle to the first worker that
-frees up, so a straggler profile never blocks the rest of the fleet.
+Two layers live here.  ``FleetBase`` is the transport-agnostic scheduler:
+it owns the pending queue, the one-bundle-per-worker-slot dispatch loop,
+the per-bundle attempt budget (a bundle that keeps killing workers is
+declared poison instead of looping forever), the run deadline, and the
+reap-requeue-refill dance when a peer dies.  It schedules ``Peer``
+objects — anything with worker slots that can ``dispatch`` a bundle and
+``recv`` a normalized reply — and never touches a pipe or a socket
+itself.
 
-Worker death is handled gracefully: a died worker's in-flight bundle is
-re-queued (with a bounded attempt count, so a bundle that *kills* workers
-poisons the run instead of looping forever), a replacement worker is
-spawned while the respawn budget lasts, and the fleet keeps draining on the
-survivors.  Only when no worker is left alive and none can be respawned
-does ``run`` raise.
+``ProcessFleet`` is the local instantiation: each peer is one spawn-based
+worker process (see ``repro.fleet.worker``) behind a multiprocessing
+``Pipe``, with its own jax client, emulator, jitted programs, and — when
+the ``WorkerSpec`` carries a ``MeshSpec`` — its own device mesh.
+``repro.fleet.transport.remote.RemoteFleet`` is the network
+instantiation: each peer is a TCP connection to a host agent that fronts
+several such worker processes on another machine.  Both inherit the same
+scheduling semantics, which is the point — a dead TCP peer is reaped
+exactly like a dead process, and its in-flight bundles requeue onto the
+survivors.
+
+Scheduling is work-stealing-simple: one in-flight bundle per worker slot,
+next bundle to the first slot that frees up, so a straggler profile never
+blocks the rest of the fleet.  Only when no peer is left alive (and none
+can be refilled) with work still pending does ``run`` raise.
 """
 from __future__ import annotations
 
@@ -23,7 +32,7 @@ import os
 import time
 from collections import deque
 from multiprocessing import connection as mp_conn
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.core.emulator import EmulationReport, Emulator, FleetReport
 from repro.fleet.bundle import ScheduleBundle, WorkerSpec, bundle_profile
@@ -32,24 +41,343 @@ from repro.fleet.worker import worker_loop
 _MAX_ATTEMPTS = 3          # dispatches per bundle before declaring it poison
 
 
-class _Worker:
-    __slots__ = ("proc", "conn", "task", "ready")
+class PeerGone(Exception):
+    """The peer (worker process or remote agent) is dead or unreachable:
+    reap it, requeue its in-flight bundles, keep draining on survivors."""
+
+
+class Peer:
+    """One schedulable fleet endpoint with ``capacity`` worker slots.
+
+    ``tasks`` is the in-flight set of ``(dispatch epoch, bundle index)``
+    pairs — epoch-qualified so a new run re-dispatching an index can never
+    collide with a stale entry for the same index.  Entries from a
+    *raised* run (stale epoch) stay until their late results arrive: they
+    keep the slot occupied — the worker really is still busy — and the
+    scheduler recognizes them by epoch, drops their results, and only
+    then reuses the slot.  Subclasses translate their wire format into the
+    normalized message tuples the scheduler consumes:
+
+      ("ready", info)                 peer finished initializing
+      ("ok",    epoch, idx, report)   bundle replayed
+      ("retry", epoch, idx, reason)   peer-side worker died; requeue the
+                                      bundle (its dispatch attempt stays
+                                      counted, so poison budgets hold)
+      ("err",   epoch, idx, tb)       bundle failed (idx=None: init died)
+    """
+
+    capacity = 1
+
+    def __init__(self):
+        self.tasks: Set[Tuple[int, int]] = set()
+        self.ready = False
+
+    @property
+    def free_slots(self) -> int:
+        return self.capacity - len(self.tasks)
+
+    def epoch_for(self, idx: int) -> Optional[int]:
+        """The dispatch epoch of in-flight bundle ``idx`` — for adapters
+        whose wire protocol doesn't echo epochs (capacity-1 pipes hold at
+        most one entry, so the lookup is unambiguous there)."""
+        return next((e for (e, i) in self.tasks if i == idx), None)
+
+    @property
+    def alive(self) -> bool:
+        """Cheap local liveness; transports without one return True and
+        let death surface as ``PeerGone`` on I/O."""
+        return True
+
+    @property
+    def waitable(self):
+        """Object for ``multiprocessing.connection.wait``."""
+        raise NotImplementedError
+
+    def dispatch(self, epoch: int, idx: int, bundle: ScheduleBundle) -> None:
+        raise NotImplementedError
+
+    def recv(self):
+        raise NotImplementedError
+
+    def stop(self) -> None:
+        """Best-effort polite shutdown request; never raises."""
+
+    def close(self) -> None:
+        """Tear down the endpoint; never raises."""
+
+    def describe(self) -> str:
+        return "fleet peer"
+
+
+class FleetBase:
+    """Transport-agnostic bundle scheduler over a pool of ``Peer``s.
+
+    Subclasses populate ``self._peers`` and may override ``_refill`` (to
+    respawn replacements after a death), ``_extra_waitables`` /
+    ``_handle_extra`` (to service non-peer readiness, e.g. accepting new
+    agents mid-run), and ``_warming`` (to gate on a minimum pool size).
+    ``worker_deaths`` counts reaped peers across the pool's lifetime.
+    """
+
+    def __init__(self):
+        self._peers: List[Peer] = []
+        self._closed = False
+        self._epoch = 0
+        self.worker_deaths = 0
+
+    # -- pool plumbing ------------------------------------------------------
+
+    def _reap(self, peer: Peer, pending: Deque[int],
+              epoch: Optional[int] = None) -> None:
+        """A peer died: requeue its in-flight bundles (only those belonging
+        to the current run — stragglers from a raised run are dropped),
+        then refill the pool."""
+        self.worker_deaths += 1
+        for e, idx in peer.tasks:
+            if epoch is not None and e == epoch:
+                pending.appendleft(idx)
+        peer.tasks.clear()
+        peer.close()
+        self._peers.remove(peer)
+        self._refill(pending)
+
+    def _refill(self, pending: Deque[int]) -> None:
+        """Hook: replace a reaped peer if the transport can."""
+
+    def _extra_waitables(self) -> List:
+        return []
+
+    def _handle_extra(self, obj) -> None:
+        raise NotImplementedError(f"unexpected waitable {obj!r}")
+
+    def _close_extras(self) -> None:
+        pass
+
+    def _wait(self, timeout: float, *, ready_only: bool = False) -> List:
+        conns = [p.waitable for p in self._peers
+                 if not (ready_only and p.ready)]
+        conns += self._extra_waitables()
+        return mp_conn.wait(conns, timeout=timeout) if conns else []
+
+    def _peer_for(self, obj) -> Optional[Peer]:
+        return next((p for p in self._peers if p.waitable is obj), None)
+
+    def _warming(self) -> bool:
+        return any(p.alive and not p.ready for p in self._peers)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def warmup(self, timeout: float = 120.0) -> List[Dict]:
+        """Block until every live peer reported ready (and any subclass
+        minimum-pool condition holds); returns their ready infos.  Not
+        required before ``run`` (dispatches queue in the transport), but
+        useful to separate spawn/connect/trace cost from replay cost —
+        ``benchmarks/bench_fleet.py`` does exactly that."""
+        deadline = time.monotonic() + timeout
+        infos: List[Dict] = []
+        while self._warming():
+            if time.monotonic() > deadline:
+                raise TimeoutError("fleet workers did not become ready "
+                                   f"within {timeout}s")
+            for obj in self._wait(0.5, ready_only=True):
+                peer = self._peer_for(obj)
+                if peer is None:
+                    self._handle_extra(obj)
+                    continue
+                try:
+                    msg = peer.recv()
+                except PeerGone:
+                    self._reap(peer, deque())
+                    continue
+                if msg[0] == "ready":
+                    peer.ready = True
+                    infos.append(msg[1])
+                elif msg[0] == "err":
+                    raise RuntimeError(
+                        f"fleet worker failed to initialize:\n{msg[-1]}")
+        if not self._peers:
+            raise RuntimeError("no fleet worker survived initialization")
+        return infos
+
+    # -- execution ----------------------------------------------------------
+
+    def run(self, bundles: Sequence[ScheduleBundle], *,
+            timeout: float = 600.0) -> List[EmulationReport]:
+        """Replay every bundle; returns reports in bundle order.
+
+        Raises RuntimeError on a peer-reported replay failure, on a
+        poison bundle (one that outlived ``_MAX_ATTEMPTS`` dispatch
+        attempts across dying workers), or when the whole pool is dead
+        with work still pending; TimeoutError past the deadline.
+        """
+        if self._closed:
+            raise RuntimeError(f"{type(self).__name__} is closed")
+        # A raised run (worker error, poison bundle, timeout) leaves
+        # stragglers replaying on live peers.  Each run gets a fresh
+        # epoch: stragglers' late results are recognized by their stale
+        # epoch, discarded, and merely free their slot — they are never
+        # returned as this run's reports and never block dispatch forever.
+        self._epoch += 1
+        epoch = self._epoch
+        pending: Deque[int] = deque(range(len(bundles)))
+        attempts = [0] * len(bundles)
+        results: Dict[int, EmulationReport] = {}
+        deadline = time.monotonic() + timeout
+        while len(results) < len(bundles):
+            if time.monotonic() > deadline:
+                raise TimeoutError(f"fleet run exceeded {timeout}s with "
+                                   f"{len(bundles) - len(results)} bundle(s) "
+                                   "unfinished")
+            # dispatch to free slots (death noticed on send is handled
+            # exactly like death noticed on receive)
+            for peer in list(self._peers):
+                while pending and peer.free_slots > 0:
+                    if not peer.alive:
+                        self._reap(peer, pending, epoch)
+                        break
+                    idx = pending.popleft()
+                    if attempts[idx] >= _MAX_ATTEMPTS:
+                        raise RuntimeError(
+                            f"bundle {idx} ({bundles[idx].command!r}) failed "
+                            f"{attempts[idx]} dispatch attempts — poison "
+                            "bundle, aborting the fleet run")
+                    attempts[idx] += 1
+                    try:
+                        peer.dispatch(epoch, idx, bundles[idx])
+                    except PeerGone:
+                        pending.appendleft(idx)
+                        attempts[idx] -= 1
+                        self._reap(peer, pending, epoch)
+                        break
+            if not self._peers:
+                raise RuntimeError(
+                    f"all fleet workers died ({self.worker_deaths} death(s)) "
+                    f"with {len(bundles) - len(results)} bundle(s) pending")
+            # collect
+            for obj in self._wait(0.5):
+                peer = self._peer_for(obj)
+                if peer is None:
+                    self._handle_extra(obj)
+                    continue
+                try:
+                    msg = peer.recv()
+                except PeerGone:
+                    self._reap(peer, pending, epoch)
+                    continue
+                kind = msg[0]
+                if kind == "ready":
+                    peer.ready = True
+                elif kind == "ok":
+                    _, e, idx, rep = msg
+                    peer.tasks.discard((e, idx))
+                    if e == epoch:
+                        results[idx] = rep
+                elif kind == "retry":
+                    _, e, idx, _reason = msg
+                    peer.tasks.discard((e, idx))
+                    if e == epoch:
+                        pending.append(idx)
+                elif kind == "err":
+                    _, e, idx, tb = msg
+                    if idx is None:
+                        raise RuntimeError(
+                            f"fleet worker failed on initialization:\n{tb}")
+                    peer.tasks.discard((e, idx))  # terminal either way
+                    if e == epoch:
+                        raise RuntimeError(
+                            f"fleet worker ({peer.describe()}) failed on "
+                            f"bundle {idx} ({bundles[idx].command!r}):\n{tb}")
+        return [results[i] for i in range(len(bundles))]
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        for peer in self._peers:
+            peer.stop()
+        for peer in self._peers:
+            peer.close()
+        self._peers.clear()
+        self._close_extras()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ---------------------------------------------------------------------------
+# local instantiation: worker processes behind multiprocessing Pipes
+# ---------------------------------------------------------------------------
+
+class _PipePeer(Peer):
+    """One spawn-based worker process behind a ``Pipe``: capacity 1.
+
+    The on-pipe worker protocol (``repro.fleet.worker``) predates epochs —
+    a capacity-1 worker replays serially, so the epoch of any reply is
+    simply the epoch its single in-flight task was dispatched under; this
+    adapter re-attaches it.
+    """
+
+    __slots__ = ("proc", "conn", "tasks", "ready")
 
     def __init__(self, proc, conn):
+        super().__init__()
         self.proc = proc
         self.conn = conn
-        # in-flight work as (run epoch, bundle index): a run() that raises
-        # leaves stragglers replaying, and the next run() must neither
-        # mistake their late results for its own nor dispatch over them
-        self.task: Optional[Tuple[int, int]] = None
-        self.ready = False
 
     @property
     def alive(self) -> bool:
         return self.proc.is_alive()
 
+    @property
+    def waitable(self):
+        return self.conn
 
-class ProcessFleet:
+    def dispatch(self, epoch, idx, bundle):
+        try:
+            self.conn.send(("run", idx, bundle))
+        except (BrokenPipeError, OSError) as e:
+            raise PeerGone(str(e)) from e
+        self.tasks.add((epoch, idx))
+
+    def recv(self):
+        try:
+            msg = self.conn.recv()
+        except (EOFError, ConnectionResetError, OSError) as e:
+            raise PeerGone(str(e)) from e
+        kind = msg[0]
+        if kind == "ready":
+            return ("ready", msg[1])
+        if kind == "ok":
+            _, idx, rep = msg
+            return ("ok", self.epoch_for(idx), idx, rep)
+        if kind == "err":
+            _, idx, tb = msg
+            return ("err", self.epoch_for(idx), idx, tb)
+        return ("err", None, None, f"unknown worker message {kind!r}")
+
+    def stop(self):
+        if self.alive:
+            try:
+                self.conn.send(("stop",))
+            except (BrokenPipeError, OSError):
+                pass
+
+    def close(self):
+        try:
+            self.conn.close()
+        except OSError:
+            pass
+        # instant for a reaped (dead) process; grace for a polite stop
+        self.proc.join(timeout=5.0)
+
+    def describe(self) -> str:
+        return f"worker pid {self.proc.pid}"
+
+
+class ProcessFleet(FleetBase):
     """A pool of emulator worker processes that replay ``ScheduleBundle``s.
 
     The pool is warm state: spawn it once, ``run()`` it many times (each
@@ -62,21 +390,16 @@ class ProcessFleet:
                  respawn: bool = True, max_respawns: Optional[int] = None):
         if n_workers < 1:
             raise ValueError("ProcessFleet needs n_workers >= 1")
+        super().__init__()
         self.spec = spec
         self.n_workers = n_workers
-        self.worker_deaths = 0
         self.respawns = 0
         self._respawn = respawn
         self._respawns_left = (n_workers if max_respawns is None
                                else max_respawns)
         self._ctx = mp.get_context("spawn")
-        self._workers: List[_Worker] = []
-        self._closed = False
-        self._epoch = 0
         for _ in range(n_workers):
             self._spawn()
-
-    # -- pool plumbing ------------------------------------------------------
 
     def _spawn(self) -> None:
         parent_conn, child_conn = self._ctx.Pipe()
@@ -105,180 +428,33 @@ class ProcessFleet:
                 else:
                     os.environ["XLA_FLAGS"] = old_flags
         child_conn.close()
-        self._workers.append(_Worker(proc, parent_conn))
+        self._peers.append(_PipePeer(proc, parent_conn))
 
-    @property
-    def pids(self) -> List[int]:
-        return [w.proc.pid for w in self._workers if w.alive]
-
-    def _reap(self, w: _Worker, pending: deque,
-              epoch: Optional[int] = None) -> None:
-        """A worker died: requeue its in-flight bundle (only if it belongs
-        to the current run — a straggler from a raised run is dropped),
-        refill the pool."""
-        self.worker_deaths += 1
-        if w.task is not None and epoch is not None and w.task[0] == epoch:
-            pending.appendleft(w.task[1])
-        w.task = None
-        try:
-            w.conn.close()
-        except OSError:
-            pass
-        self._workers.remove(w)
-        w.proc.join(timeout=1.0)
+    def _refill(self, pending: Deque[int]) -> None:
         if self._respawn and self._respawns_left > 0:
             self._respawns_left -= 1
             self.respawns += 1
             self._spawn()
 
-    def warmup(self, timeout: float = 120.0) -> List[Dict]:
-        """Block until every live worker reported ready; returns their
-        ready infos.  Not required before ``run`` (dispatches queue in the
-        pipe), but useful to separate spawn/trace cost from replay cost —
-        ``benchmarks/bench_fleet.py`` does exactly that."""
-        deadline = time.monotonic() + timeout
-        infos = []
-        while any(w.alive and not w.ready for w in self._workers):
-            if time.monotonic() > deadline:
-                raise TimeoutError("fleet workers did not become ready "
-                                   f"within {timeout}s")
-            conns = [w.conn for w in self._workers
-                     if w.alive and not w.ready]
-            for conn in mp_conn.wait(conns, timeout=0.5):
-                w = next(x for x in self._workers if x.conn is conn)
-                try:
-                    msg = conn.recv()
-                except (EOFError, ConnectionResetError, OSError):
-                    self._reap(w, deque())
-                    continue
-                if msg[0] == "ready":
-                    w.ready = True
-                    infos.append(msg[1])
-                elif msg[0] == "err":
-                    raise RuntimeError(
-                        f"fleet worker failed to initialize:\n{msg[2]}")
-        if not self._workers:
-            raise RuntimeError("no fleet worker survived initialization")
-        return infos
-
-    # -- execution ----------------------------------------------------------
-
-    def run(self, bundles: Sequence[ScheduleBundle], *,
-            timeout: float = 600.0) -> List[EmulationReport]:
-        """Replay every bundle; returns reports in bundle order.
-
-        Raises RuntimeError on a worker-reported replay failure, on a
-        poison bundle (one that outlived ``_MAX_ATTEMPTS`` dispatch
-        attempts across dying workers), or when the whole pool is dead
-        with work still pending.
-        """
-        if self._closed:
-            raise RuntimeError("ProcessFleet is closed")
-        # A raised run (worker error, poison bundle, timeout) leaves
-        # stragglers replaying on live workers.  Each run gets a fresh
-        # epoch: stragglers' late results are recognized by their stale
-        # epoch, discarded, and merely free their worker — they are never
-        # returned as this run's reports and never block dispatch forever.
-        self._epoch += 1
-        epoch = self._epoch
-        pending = deque(range(len(bundles)))
-        attempts = [0] * len(bundles)
-        results: Dict[int, EmulationReport] = {}
-        deadline = time.monotonic() + timeout
-        while len(results) < len(bundles):
-            if time.monotonic() > deadline:
-                raise TimeoutError(f"fleet run exceeded {timeout}s with "
-                                   f"{len(bundles) - len(results)} bundle(s) "
-                                   "unfinished")
-            # dispatch to idle workers (death noticed on send is handled
-            # exactly like death noticed on receive)
-            for w in list(self._workers):
-                if w.task is None and pending:
-                    if not w.alive:
-                        self._reap(w, pending, epoch)
-                        continue
-                    idx = pending.popleft()
-                    if attempts[idx] >= _MAX_ATTEMPTS:
-                        raise RuntimeError(
-                            f"bundle {idx} ({bundles[idx].command!r}) failed "
-                            f"{attempts[idx]} dispatch attempts — poison "
-                            "bundle, aborting the fleet run")
-                    attempts[idx] += 1
-                    try:
-                        w.conn.send(("run", idx, bundles[idx]))
-                        w.task = (epoch, idx)
-                    except (BrokenPipeError, OSError):
-                        pending.appendleft(idx)
-                        attempts[idx] -= 1
-                        self._reap(w, pending, epoch)
-            if not self._workers:
-                raise RuntimeError(
-                    f"all fleet workers died ({self.worker_deaths} death(s)) "
-                    f"with {len(bundles) - len(results)} bundle(s) pending")
-            # collect
-            conns = [w.conn for w in self._workers]
-            for conn in mp_conn.wait(conns, timeout=0.5):
-                w = next((x for x in self._workers if x.conn is conn), None)
-                if w is None:
-                    continue
-                try:
-                    msg = conn.recv()
-                except (EOFError, ConnectionResetError, OSError):
-                    self._reap(w, pending, epoch)
-                    continue
-                if msg[0] == "ready":
-                    w.ready = True
-                elif msg[0] == "ok":
-                    _, idx, rep = msg
-                    current = w.task is not None and w.task[0] == epoch
-                    w.task = None
-                    if current:
-                        results[idx] = rep
-                elif msg[0] == "err":
-                    _, idx, tb = msg
-                    if idx is None:
-                        raise RuntimeError(
-                            f"fleet worker failed on initialization:\n{tb}")
-                    current = w.task is not None and w.task[0] == epoch
-                    w.task = None          # terminal either way
-                    if current:
-                        raise RuntimeError(
-                            f"fleet worker failed on bundle {idx} "
-                            f"({bundles[idx].command!r}):\n{tb}")
-        return [results[i] for i in range(len(bundles))]
+    @property
+    def pids(self) -> List[int]:
+        return [p.proc.pid for p in self._peers if p.alive]
 
     def close(self) -> None:
         if self._closed:
             return
-        self._closed = True
-        for w in self._workers:
-            if w.alive:
-                try:
-                    w.conn.send(("stop",))
-                except (BrokenPipeError, OSError):
-                    pass
-        for w in self._workers:
-            w.proc.join(timeout=5.0)
-            if w.proc.is_alive():
-                w.proc.terminate()
-                w.proc.join(timeout=2.0)
-            try:
-                w.conn.close()
-            except OSError:
-                pass
-        self._workers.clear()
-
-    def __enter__(self) -> "ProcessFleet":
-        return self
-
-    def __exit__(self, *exc) -> None:
-        self.close()
+        peers = list(self._peers)
+        super().close()                     # stop + close (join 5s each)
+        for p in peers:                     # stragglers get the axe
+            if p.proc.is_alive():
+                p.proc.terminate()
+                p.proc.join(timeout=2.0)
 
 
 def run_process_fleet(emulator: Emulator, profiles, *, max_workers: int = 4,
                       mesh_spec=None, flops_scale: float = 1.0,
                       storage_scale: float = 1.0, mem_scale: float = 1.0,
-                      verify: bool = True,
+                      verify: bool = True, timeout: float = 600.0,
                       fleet: Optional[ProcessFleet] = None) -> FleetReport:
     """Compile → detach → ship: one-call process-fleet replay.
 
@@ -302,7 +478,7 @@ def run_process_fleet(emulator: Emulator, profiles, *, max_workers: int = 4,
                                                  mesh=mesh_spec))
     t0 = time.perf_counter()
     try:
-        reports = fleet.run(bundles)
+        reports = fleet.run(bundles, timeout=timeout)
     finally:
         if own:
             fleet.close()

@@ -1,0 +1,14 @@
+"""Socket transport for multi-host fleets.
+
+``framing`` is the wire layer (magic/version handshake, length-prefixed
+pickle frames, loud typed failures); ``remote`` is the coordinator side
+(``RemoteFleet`` — the transport-agnostic fleet scheduler over framed TCP
+peers); ``repro.fleet.agent`` is the host side (``python -m
+repro.fleet.agent`` joins a machine's worker processes to a coordinator).
+"""
+from repro.fleet.transport.framing import (MAGIC, VERSION,  # noqa: F401
+                                           FramingError, TransportClosed,
+                                           TransportError, VersionMismatch)
+from repro.fleet.transport.remote import (AgentPeer,  # noqa: F401
+                                          RemoteFleet, parse_addr,
+                                          run_remote_fleet)

@@ -1,0 +1,285 @@
+"""Multi-host fleet: schedule bundles over TCP to host agents.
+
+``RemoteFleet`` is the network instantiation of the transport-agnostic
+scheduler in ``repro.fleet.executor``: each peer is one framed TCP
+connection (see ``framing``) to a host agent
+(``python -m repro.fleet.agent``) that fronts N worker processes on its
+machine.  The coordinator ships the ``WorkerSpec`` once per agent at
+join time, then streams ``ScheduleBundle``s into the agent's free worker
+slots and collects ``EmulationReport``s — the same attempt-budget,
+poison-bundle, and worker-death semantics as ``ProcessFleet``, because
+it *is* the same scheduler: a dead TCP peer is reaped like a dead
+process, and its in-flight bundles requeue onto surviving agents.
+
+Two join topologies, freely mixable:
+
+  * **dial** — agents already listening (``agent --listen``), the
+    coordinator connects out: ``RemoteFleet(spec, hosts=["h1:9000",
+    "h2:9000"])``.
+  * **accept** — the coordinator listens and agents dial in
+    (``agent --connect host:port``): ``RemoteFleet(spec,
+    listen="0.0.0.0:9000", agents=2)``.  The listener stays open during
+    runs, so late agents join the pool mid-run — a reaped agent's work
+    can drain onto a machine that wasn't there when the run started.
+
+Wire messages (pickled frames; every run/reply carries the dispatch
+epoch so a straggler reply from an aborted run can never be mistaken
+for a live one):
+
+  coordinator -> agent:  ("spec", WorkerSpec)
+                         ("run", epoch, idx, ScheduleBundle)
+                         ("stop",)
+  agent -> coordinator:  ("ready", info)
+                         ("ok", epoch, idx, EmulationReport)
+                         ("retry", epoch, idx, reason)   requeue: an
+                              agent-local worker died with this in flight
+                         ("err", epoch, idx, traceback)  idx=None: the
+                              agent itself failed to initialize
+"""
+from __future__ import annotations
+
+import socket
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.emulator import Emulator, FleetReport
+from repro.fleet.bundle import WorkerSpec, bundle_profile
+from repro.fleet.executor import FleetBase, Peer, PeerGone
+from repro.fleet.transport import framing
+
+_IO_TIMEOUT = 60.0         # per-chunk socket deadline: a wedged peer is
+                           # a dead peer, not a hung coordinator
+_HANDSHAKE_TIMEOUT = 10.0  # dial: we initiated, give the agent room
+# Accepts happen inline in the scheduler loop, so a stray TCP client that
+# connects and says nothing stalls dispatch for the whole handshake
+# window — keep it short: a real agent writes its 8-byte hello
+# immediately after connecting.
+_ACCEPT_HANDSHAKE_TIMEOUT = 2.0
+
+
+def parse_addr(text: str) -> Tuple[str, int]:
+    """``"host:port"`` (or bare ``"port"``) -> (host, port)."""
+    host, _, port = str(text).rpartition(":")
+    try:
+        return host or "127.0.0.1", int(port)
+    except ValueError:
+        raise ValueError(f"bad address {text!r}: expected HOST:PORT") from None
+
+
+class AgentPeer(Peer):
+    """One connected host agent; capacity = its advertised worker count."""
+
+    def __init__(self, sock: socket.socket, addr: Tuple[str, int]):
+        super().__init__()
+        self.sock = sock
+        self.addr = addr
+        self.capacity = 1          # grows when the ready info arrives
+
+    @property
+    def waitable(self):
+        return self.sock
+
+    def dispatch(self, epoch, idx, bundle):
+        try:
+            framing.send_frame(self.sock, ("run", epoch, idx, bundle))
+        except framing.TransportError as e:
+            raise PeerGone(str(e)) from e
+        self.tasks.add((epoch, idx))
+
+    def recv(self):
+        try:
+            msg = framing.recv_frame(self.sock)
+        except framing.TransportError as e:
+            # a corrupt stream (FramingError) is as unusable as a closed
+            # one — either way this peer is done
+            raise PeerGone(str(e)) from e
+        kind = msg[0]
+        if kind == "ready":
+            info = msg[1]
+            self.capacity = max(1, int(info.get("workers", 1)))
+            return ("ready", info)
+        if kind in ("ok", "retry", "err"):
+            return msg
+        return ("err", None, None, f"unknown agent message {kind!r}")
+
+    def stop(self):
+        try:
+            framing.send_frame(self.sock, ("stop",))
+        except framing.TransportError:
+            pass
+
+    def close(self):
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+
+    def describe(self) -> str:
+        return f"agent {self.addr[0]}:{self.addr[1]}"
+
+
+class RemoteFleet(FleetBase):
+    """A fleet of host agents reachable over TCP.
+
+    Warm state like ``ProcessFleet``: agents join once (spawning and
+    warming their local workers), then many ``run()`` calls reuse their
+    traced programs.  ``worker_deaths`` counts reaped *agents*;
+    ``n_workers`` is the fleet-wide worker-slot total.
+    """
+
+    def __init__(self, spec: WorkerSpec, *,
+                 hosts: Optional[Sequence[str]] = None,
+                 listen: Optional[str] = None,
+                 agents: Optional[int] = None,
+                 connect_timeout: float = 30.0):
+        super().__init__()
+        if not hosts and listen is None:
+            raise ValueError("RemoteFleet needs agents to schedule on: pass "
+                             "hosts=[...] to dial listening agents and/or "
+                             "listen='host:port' (+ agents=N) to accept "
+                             "dial-in agents")
+        if agents is not None and listen is None:
+            raise ValueError("agents=N counts dial-in joins and needs "
+                             "listen='host:port'")
+        self.spec = spec
+        self._listener: Optional[socket.socket] = None
+        self._min_agents = len(hosts or ())
+        for addr in hosts or ():
+            self._dial(parse_addr(addr), connect_timeout)
+        if listen is not None:
+            host, port = parse_addr(listen)
+            self._listener = socket.create_server((host, port), backlog=16)
+            self._min_agents += 1 if agents is None else agents
+
+    # -- joining ------------------------------------------------------------
+
+    @property
+    def bound_addr(self) -> Optional[Tuple[str, int]]:
+        """The listener's actual (host, port) — for ``listen='host:0'``."""
+        if self._listener is None:
+            return None
+        addr = self._listener.getsockname()
+        return addr[0], addr[1]
+
+    @property
+    def n_workers(self) -> int:
+        return sum(p.capacity for p in self._peers)
+
+    @property
+    def n_agents(self) -> int:
+        return len(self._peers)
+
+    def _dial(self, addr: Tuple[str, int], timeout: float) -> None:
+        sock = socket.create_connection(addr, timeout=timeout)
+        self._join(sock, addr, _HANDSHAKE_TIMEOUT)
+
+    def _join(self, sock: socket.socket, addr: Tuple[str, int],
+              handshake_timeout: float) -> None:
+        """Handshake + ship the WorkerSpec; the ready comes back later
+        through the normal scheduler loop."""
+        sock.settimeout(handshake_timeout)
+        try:
+            framing.handshake(sock)
+            framing.send_frame(sock, ("spec", self.spec))
+        except framing.TransportError:
+            sock.close()
+            raise
+        sock.settimeout(_IO_TIMEOUT)
+        self._peers.append(AgentPeer(sock, addr))
+
+    def _handle_extra(self, obj) -> None:
+        if obj is not self._listener:
+            return
+        try:
+            sock, addr = self._listener.accept()
+        except OSError:
+            return
+        try:
+            self._join(sock, addr, _ACCEPT_HANDSHAKE_TIMEOUT)
+        except framing.TransportError:
+            # not a fleet agent (port scanner, wrong version): drop it,
+            # keep listening — never take the fleet down
+            pass
+
+    def _extra_waitables(self) -> List:
+        return [self._listener] if self._listener is not None else []
+
+    def _close_extras(self) -> None:
+        if self._listener is not None:
+            try:
+                self._listener.close()
+            except OSError:
+                pass
+            self._listener = None
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def _warming(self) -> bool:
+        return (sum(1 for p in self._peers if p.ready) < self._min_agents
+                or super()._warming())
+
+    def warmup(self, timeout: float = 120.0) -> List[Dict]:
+        infos = super().warmup(timeout)
+        # the join gate is for *initial* fleet assembly only — once met,
+        # later agent deaths are handled by reap/requeue, not by blocking
+        # the next run on a replacement that may never come
+        self._min_agents = 0
+        return infos
+
+    def run(self, bundles, *, timeout: float = 600.0):
+        if self._min_agents:
+            # initial assembly only: agents may still be dialing in, so
+            # don't declare an empty pool dead before the join gate was
+            # ever met.  Once assembled (_min_agents == 0), a late joiner
+            # that is connected but still warming must NOT re-gate the
+            # run — dispatches to it buffer in the socket, and the warm
+            # agents keep draining meanwhile.
+            self.warmup(timeout=min(timeout, 120.0))
+        return super().run(bundles, timeout=timeout)
+
+
+def run_remote_fleet(emulator: Emulator, profiles, *,
+                     hosts: Optional[Sequence[str]] = None,
+                     listen: Optional[str] = None,
+                     agents: Optional[int] = None, mesh_spec=None,
+                     flops_scale: float = 1.0, storage_scale: float = 1.0,
+                     mem_scale: float = 1.0, verify: bool = True,
+                     timeout: float = 600.0,
+                     fleet: Optional[RemoteFleet] = None) -> FleetReport:
+    """Compile → detach → ship over TCP: one-call remote-fleet replay.
+
+    Backs ``Emulator.emulate_many(executor="remote")``.  Pass ``fleet`` to
+    reuse a warm ``RemoteFleet`` (the caller keeps ownership); otherwise
+    one is assembled from ``hosts``/``listen``/``agents`` and torn down
+    around this run — tearing down tells the agents to exit, so one-shot
+    runs don't leave orphaned worker pools on other machines.  With
+    ``mesh_spec`` set, every agent's workers build their own device mesh
+    and collective legs execute on each host.
+    """
+    own = fleet is None
+    if own:
+        # assemble (and config-validate / dial) BEFORE compiling: a bad
+        # hosts/listen config or unreachable agent should not cost a full
+        # fleet's worth of trace/compile work first
+        fleet = RemoteFleet(WorkerSpec(emulator=emulator.spec(),
+                                       mesh=mesh_spec),
+                            hosts=hosts, listen=listen, agents=agents)
+    t0 = time.perf_counter()
+    try:
+        keep = True if mesh_spec is not None else None
+        bundles = [bundle_profile(emulator, p, keep_collectives=keep,
+                                  flops_scale=flops_scale,
+                                  storage_scale=storage_scale,
+                                  mem_scale=mem_scale, verify=verify)
+                   for p in profiles]
+        reports = fleet.run(bundles, timeout=timeout)
+        stats = {"agents": fleet.n_agents, "workers": fleet.n_workers,
+                 "worker_deaths": fleet.worker_deaths}
+        workers = fleet.n_workers
+    finally:
+        if own:
+            fleet.close()
+    wall = time.perf_counter() - t0
+    return FleetReport(reports=reports, wall_s=wall,
+                       serial_s=sum(r.ttc_s for r in reports),
+                       max_workers=workers, cache_stats=stats)

@@ -4,13 +4,19 @@
     python -m repro.scenarios run training_scan -p n_steps=6 -p ckpt_every=3
     python -m repro.scenarios fleet training_scan:n_steps=6 serving_traffic \
         --executor process --workers 2 --mesh 2
+    python -m repro.scenarios fleet --store runs/ --from-store scenario=x \
+        --executor remote --host host1:9000 --host host2:9000
 
 ``list`` shows every registered generator with its defaults; ``run`` pushes
 one scenario through generate -> predict -> emulate (-> store with
 ``--store``); ``fleet`` replays a batch concurrently, with ``--executor``
-selecting the in-process thread pool or the process-level fleet executor
-(``repro.fleet``) and ``--mesh N`` giving each worker process an N-device
-mesh so collective legs execute.
+selecting the in-process thread pool, the process-level fleet executor
+(``repro.fleet``), or a remote fleet of host agents over TCP (``--host``
+dials listening ``python -m repro.fleet.agent`` processes; ``--listen`` +
+``--agents`` accepts dial-in ones) and ``--mesh N`` giving each worker
+process an N-device mesh so collective legs execute.  ``--from-store``
+turns ``--store`` into a profile *source*: matching stored profiles are
+streamed into the fleet alongside (or instead of) generated jobs.
 """
 from __future__ import annotations
 
@@ -99,9 +105,19 @@ def _cmd_fleet(args) -> int:
         from repro.fleet import MeshSpec
         mesh_spec = MeshSpec(shape=(args.mesh,), axes=("model",))
     jobs = [_parse_job(j) for j in args.job]
-    out = run_fleet(jobs, store=_store(args.store),
+    store = _store(args.store)
+    profiles = None
+    if args.from_store is not None:
+        # _parse_params coercion (int -> float -> bool -> str) matches the
+        # JSON types tag values round-trip through the store with
+        tags = _parse_params(args.from_store.split(",")) \
+            if args.from_store else {}
+        profiles = store.stream(tags)
+    out = run_fleet(jobs, profiles=profiles, store=store,
                     max_workers=args.workers, executor=args.executor,
-                    mesh_spec=mesh_spec)
+                    mesh_spec=mesh_spec, fused=not args.per_sample,
+                    hosts=args.host or None, listen=args.listen,
+                    agents=args.agents, timeout=args.timeout)
     f = out.fleet
     if args.json:
         print(json.dumps({"fleet": f.summary(),
@@ -144,21 +160,59 @@ def main(argv: Optional[List[str]] = None) -> int:
     run_p.add_argument("--json", action="store_true")
 
     fl = sub.add_parser("fleet", help="replay a batch of scenarios")
-    fl.add_argument("job", nargs="+",
+    fl.add_argument("job", nargs="*",
                     metavar="NAME[:k=v,k=v]", help="scenario job spec")
-    fl.add_argument("--executor", choices=("thread", "process"),
+    fl.add_argument("--executor", choices=("thread", "process", "remote"),
                     default="thread")
     fl.add_argument("--workers", type=int, default=4)
     fl.add_argument("--mesh", type=int, default=0, metavar="N",
-                    help="give each process worker an N-device mesh "
-                         "(process executor only)")
+                    help="give each process/remote worker an N-device mesh "
+                         "(not available on the thread executor)")
+    fl.add_argument("--per-sample", action="store_true",
+                    help="force the legacy per-sample replay path "
+                         "(thread executor only)")
+    fl.add_argument("--timeout", type=float, default=600.0, metavar="S",
+                    help="abort the fleet replay after S seconds "
+                         "(default 600)")
+    fl.add_argument("--host", action="append", default=[],
+                    metavar="HOST:PORT",
+                    help="dial a remote agent listening at HOST:PORT "
+                         "(repeatable; remote executor only)")
+    fl.add_argument("--listen", default=None, metavar="HOST:PORT",
+                    help="listen at HOST:PORT for dial-in remote agents "
+                         "(remote executor only)")
+    fl.add_argument("--agents", type=int, default=None, metavar="N",
+                    help="with --listen: wait for N agents to join "
+                         "before replaying")
     fl.add_argument("--store", default=None, help="ProfileStore directory")
+    fl.add_argument("--from-store", default=None, nargs="?", const="",
+                    metavar="TAGS",
+                    help="stream profiles matching TAGS (k=v,k=v; empty "
+                         "for all) out of --store into the fleet")
     fl.add_argument("--json", action="store_true")
 
     args = ap.parse_args(argv)
-    if args.cmd == "fleet" and args.mesh and args.executor != "process":
-        ap.error("--mesh requires --executor process "
-                 "(threads cannot own per-worker meshes)")
+    if args.cmd == "fleet":
+        if args.mesh and args.executor == "thread":
+            ap.error("--mesh requires --executor process or remote "
+                     "(threads cannot own per-worker meshes)")
+        if args.per_sample and args.executor != "thread":
+            ap.error(f"--per-sample is incompatible with --executor "
+                     f"{args.executor}: process/remote fleets ship "
+                     "compiled (fused) schedules")
+        if (args.host or args.listen or args.agents is not None) \
+                and args.executor != "remote":
+            ap.error("--host/--listen/--agents require --executor remote")
+        if args.executor == "remote" and not args.host and not args.listen:
+            ap.error("--executor remote needs --host HOST:PORT (dial "
+                     "listening agents) and/or --listen HOST:PORT "
+                     "[--agents N] (accept dial-in agents)")
+        if args.from_store is not None and args.store is None:
+            ap.error("--from-store streams out of --store; pass --store "
+                     "DIR too")
+        if not args.job and args.from_store is None:
+            ap.error("nothing to replay: give scenario jobs and/or "
+                     "--from-store")
     return {"list": _cmd_list, "run": _cmd_run, "fleet": _cmd_fleet}[args.cmd](args)
 
 

@@ -10,9 +10,10 @@ batch of scenarios and replays them concurrently through
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
-from repro.core.emulator import EmulationReport, Emulator, FleetReport
+from repro.core.emulator import (VALID_EXECUTORS, EmulationReport, Emulator,
+                                 FleetReport)
 from repro.core.hardware import (HOST_I7_M620, HOST_STAMPEDE_NODE, TPU_V5E,
                                  HardwareSpec)
 from repro.core.metrics import SynapseProfile
@@ -69,38 +70,66 @@ class FleetResult:
     predictions: Dict = field(default_factory=dict)  # predict_fleet() row
 
 
-def run_fleet(jobs: Sequence[Tuple[str, Dict]], *,
+def run_fleet(jobs: Sequence[Tuple[str, Dict]] = (), *,
+              profiles: Optional[Iterable[SynapseProfile]] = None,
               store: Optional[ProfileStore] = None,
               hw: HardwareSpec = TPU_V5E,
               specs: Optional[Sequence[HardwareSpec]] = None,
               emulator: Optional[Emulator] = None,
               max_workers: int = 4, fused: bool = True,
-              executor: str = "thread", mesh_spec=None) -> FleetResult:
-    """Synthesize a fleet of scenarios and replay it concurrently.
+              executor: str = "thread", mesh_spec=None,
+              hosts=None, listen=None, agents=None,
+              timeout: float = 600.0) -> FleetResult:
+    """Synthesize and/or pull a fleet of profiles and replay it concurrently.
 
     ``jobs`` is a sequence of (scenario_name, params) pairs.  Profiles are
     generated and predicted up front (across ``specs``, forwarded to each
     ``run_scenario`` call — defaulting to ``DEFAULT_SPECS``), then handed
     to ``emulate_many`` so the shared plan cache dedups identical
-    (atom, amount) plans fleet-wide; profiles are stored only after
-    emulation so the persisted meta carries ``emulated_ttc_s`` exactly
-    like single ``run_scenario`` calls.
+    (atom, amount) plans fleet-wide; generated profiles are stored only
+    after emulation so the persisted meta carries ``emulated_ttc_s``
+    exactly like single ``run_scenario`` calls.
 
-    ``executor``/``mesh_spec`` select the fleet backend: worker threads in
-    this process (default) or a ``repro.fleet.ProcessFleet`` of worker
-    processes, each with its own emulator and — given a ``MeshSpec`` —
-    its own mesh, so scenarios with collective legs execute them.
+    ``profiles`` feeds the fleet from pre-built profiles instead of (or in
+    addition to) generators — typically ``ProfileStore.stream(tags)``, the
+    replay-a-captured-day path.  Streamed profiles are drained lazily into
+    the job list, reuse any predictions persisted in their meta, and are
+    *not* re-stored (they usually came from ``store``).
+
+    ``executor`` selects the fleet backend (``repro.core.emulator.
+    VALID_EXECUTORS``): worker threads in this process, a
+    ``repro.fleet.ProcessFleet`` of local worker processes, or a
+    ``repro.fleet.RemoteFleet`` of host agents over TCP
+    (``hosts``/``listen``/``agents``, see ``emulate_many``).  With a
+    ``MeshSpec`` every process/remote worker builds its own mesh, so
+    scenarios with collective legs execute them.  ``timeout`` bounds the
+    replay (strict for process/remote; best-effort for threads).
     """
+    if executor not in VALID_EXECUTORS:
+        # fail before paying generate/predict cost for the whole fleet
+        raise ValueError(
+            f"unknown executor {executor!r}; valid choices: "
+            + ", ".join(repr(e) for e in VALID_EXECUTORS))
     results = [run_scenario(name, emulate=False, specs=specs, **params)
                for name, params in jobs]
+    pulled = [ScenarioResult(name=p.tags.get("scenario", p.command),
+                             profile=p,
+                             predictions=p.meta.get("predictions", {}))
+              for p in (profiles or ())]
+    results = results + pulled
+    if not results:
+        raise ValueError("run_fleet needs jobs and/or profiles to replay")
     em = emulator or Emulator()
     fleet = em.emulate_many([r.profile for r in results],
                             max_workers=max_workers, fused=fused,
-                            executor=executor, mesh_spec=mesh_spec)
-    for r, rep in zip(results, fleet.reports):
+                            executor=executor, mesh_spec=mesh_spec,
+                            hosts=hosts, listen=listen, agents=agents,
+                            timeout=timeout)
+    n_generated = len(results) - len(pulled)
+    for i, (r, rep) in enumerate(zip(results, fleet.reports)):
         r.report = rep
         r.profile.meta["emulated_ttc_s"] = rep.ttc_s
-        if store is not None:
+        if store is not None and i < n_generated:
             r.run_id = store.add(r.profile)
     return FleetResult(results=results, fleet=fleet,
                        predictions=predict_fleet(

@@ -227,11 +227,85 @@ def test_cli_fleet_threads(capsys):
     assert "fanout_straggler" in capsys.readouterr().out
 
 
+def test_cli_fleet_per_sample_and_timeout(capsys):
+    """ISSUE 4 parity satellite: ``fleet`` grew ``run``'s --per-sample
+    plus --timeout, forwarded through run_fleet -> emulate_many."""
+    rc = cli_main(["fleet", "fanout_straggler:n_workers=3,work_flops=5e7,"
+                   "work_hbm=4e7", "--workers", "1", "--per-sample",
+                   "--timeout", "120", "--json"])
+    assert rc == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert [r["mode"] for r in payload["reports"]] == ["per_sample"]
+
+
+def test_run_fleet_timeout_is_enforced():
+    jobs = [("fanout_straggler", dict(n_workers=3, work_flops=5e7,
+                                      work_hbm=4e7, jitter=0.0))] * 3
+    with pytest.raises(TimeoutError, match="exceeded"):
+        run_fleet(jobs, max_workers=1, timeout=0.0)
+
+
 def test_cli_rejects_bad_input(capsys):
     with pytest.raises(SystemExit):
         cli_main(["run", "fanout_straggler", "-p", "nonsense"])
-    with pytest.raises(SystemExit):   # --mesh needs the process executor
+    with pytest.raises(SystemExit):   # --mesh needs process/remote workers
         cli_main(["fleet", "fanout_straggler", "--mesh", "2"])
+    with pytest.raises(SystemExit):   # shipped bundles are always fused
+        cli_main(["fleet", "fanout_straggler", "--per-sample",
+                  "--executor", "process"])
+    with pytest.raises(SystemExit):   # agent knobs are remote-only
+        cli_main(["fleet", "fanout_straggler", "--host", "h:1"])
+    with pytest.raises(SystemExit):   # remote needs somewhere to find agents
+        cli_main(["fleet", "fanout_straggler", "--executor", "remote"])
+    with pytest.raises(SystemExit):   # --from-store needs a --store
+        cli_main(["fleet", "--from-store", "scenario=x"])
+    with pytest.raises(SystemExit):   # nothing to replay
+        cli_main(["fleet"])
+
+
+# ---------------------------------------------------------------------------
+# store streaming: --store as a profile source (ISSUE 4 satellite)
+# ---------------------------------------------------------------------------
+
+def test_store_stream_is_lazy_and_matches_find(tmp_path):
+    store = ProfileStore(str(tmp_path))
+    for name in ("fanout_straggler", "retry_storm"):
+        run_scenario(name, store=store, emulate=False, **FAST[name])
+    it = store.stream({"scenario": "fanout_straggler"})
+    assert iter(it) is it                     # a true lazy iterator
+    got = list(it)
+    assert [p.command for p in got] == \
+        [p.command for p in store.find({"scenario": "fanout_straggler"})]
+    # no filter streams everything; bogus filter streams nothing
+    assert len(list(store.stream())) == 2
+    assert list(store.stream({"scenario": "nope"})) == []
+
+
+def test_run_fleet_pulls_profiles_from_store(tmp_path):
+    store = ProfileStore(str(tmp_path))
+    run_scenario("fanout_straggler", store=store, emulate=False,
+                 **FAST["fanout_straggler"])
+    n_before = len(store.keys())
+    out = run_fleet(profiles=store.stream({"scenario": "fanout_straggler"}),
+                    store=store, max_workers=1)
+    assert len(out.results) == 1
+    assert out.results[0].name == "fanout_straggler"
+    assert out.results[0].report is not None
+    # streamed profiles reuse persisted predictions and are NOT re-stored
+    assert out.results[0].predictions
+    assert len(store.keys()) == n_before
+    assert out.results[0].run_id is None
+
+
+def test_cli_fleet_from_store(capsys, tmp_path):
+    store_dir = str(tmp_path)
+    run_scenario("fanout_straggler", store=ProfileStore(store_dir),
+                 emulate=False, **FAST["fanout_straggler"])
+    rc = cli_main(["fleet", "--store", store_dir, "--from-store",
+                   "scenario=fanout_straggler", "--workers", "1", "--json"])
+    assert rc == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["fleet"]["n_profiles"] == 1
 
 
 def test_emulate_many_with_storage_leg(tmp_path):
