@@ -9,11 +9,26 @@ lowers to ONE ``lax.scan`` dispatch for the whole profile.  Amounts are
 kept near the one-iteration atom minimum so wall time is dominated by
 dispatch overhead, which is what we are measuring.
 
+The collective scenario (ISSUE 5) is the same experiment on a
+communication-heavy profile: every sample carries wire bytes, which the
+pre-fused-collectives emulator lowered to one ``BarrierStep`` per sample
+(``keep_collectives=True`` — still available as the meshless fallback)
+while mesh-bound segments now fuse the whole profile into ONE scan whose
+body runs the shard_map'd collective.  It re-execs python with two forced
+host devices (XLA fixes the device count at first init, so the parent
+process can't build the mesh itself).  Dispatch counts are asserted
+EXACTLY; wall-clock gets a loose regression guard only (shared runners
+swing ~2x run-to-run).
+
 Both paths are warmed first (plans built, programs traced) and must report
-bit-identical consumed totals; the acceptance bar is a >=3x lower
-per-sample overhead for the fused path.
+bit-identical consumed totals.
 """
 from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
 
 from benchmarks.common import emit
 from repro.core import (Emulator, PlanCache, ResourceVector, Sample,
@@ -32,6 +47,93 @@ def synthetic_profile(n_samples: int) -> SynapseProfile:
         for i in range(n_samples)]
     return SynapseProfile(command="bench:dispatch", samples=samples,
                           tags={"bench": "dispatch"})
+
+
+def collective_profile(n_samples: int) -> SynapseProfile:
+    """Collective-heavy profile: every sample burns a little compute and
+    moves alternating wire amounts (so no two consecutive samples
+    collapse) — the shape that used to force one barrier per sample.
+    Amounts sit at 1–2 collective-quantization iterations, the wire
+    analogue of the near-minimum compute/memory amounts above: wall time
+    is dominated by dispatch overhead, which is what we measure."""
+    from repro.core.atoms import COLL_BLOCK_ELEMS, collective_factor
+    fpi = 2.0 * TILE ** 3
+    wpi = collective_factor("all-reduce", 2) * 4.0 * COLL_BLOCK_ELEMS
+    samples = [Sample(index=i, resources=ResourceVector(
+        flops=fpi, ici_bytes={"all-reduce": (1 + i % 2) * wpi}))
+        for i in range(n_samples)]
+    return SynapseProfile(command="bench:dispatch-collective",
+                          samples=samples,
+                          tags={"bench": "dispatch", "kind": "collective"})
+
+
+def _collective_child(fast: bool) -> None:
+    """Runs inside the forced-2-device subprocess: measure barrier-step
+    replay (the old lowering) vs mesh-bound fused segments, assert the
+    contracts, print one JSON row on the last stdout line."""
+    import jax
+    n = 256 if fast else 1024
+    reps = 5
+    mesh = jax.make_mesh((2,), ("model",))
+    em = Emulator(compute_tile=TILE, mem_block=BLOCK, mesh=mesh,
+                  plan_cache=PlanCache())
+    prof = collective_profile(n)
+    barrier_sched = em.compile(prof, keep_collectives=True)
+    fused_sched = em.compile(prof)
+
+    barrier_rep = em.replay(barrier_sched, command=prof.command)   # warm
+    fused_rep = em.replay(fused_sched, command=prof.command)       # warm
+    assert fused_rep.consumed == barrier_rep.consumed == prof.totals, \
+        "fused and barrier collective replay must consume identical totals"
+    # dispatch counts are exact, not a distribution: one fused scan for the
+    # whole profile vs per-sample compute+wire launches on the barrier path
+    assert fused_rep.n_dispatches == 1, fused_rep.n_dispatches
+    assert barrier_rep.n_dispatches == 2 * n, barrier_rep.n_dispatches
+    assert fused_rep.n_collective_dispatches == \
+        barrier_rep.n_collective_dispatches == n
+
+    barrier_s = min(em.replay(barrier_sched, command=prof.command).ttc_s
+                    for _ in range(reps))
+    fused_s = min(em.replay(fused_sched, command=prof.command).ttc_s
+                  for _ in range(reps))
+    ratio = barrier_s / fused_s if fused_s else float("inf")
+    # loose wall-clock guard only (see module docstring)
+    assert ratio >= 2.0, \
+        f"fused collectives must cut per-sample overhead (got {ratio:.2f}x)"
+    print(json.dumps({
+        "n_samples": n,
+        "barrier_ttc_s": barrier_s,
+        "fused_ttc_s": fused_s,
+        "barrier_us_per_sample": barrier_s / n * 1e6,
+        "fused_us_per_sample": fused_s / n * 1e6,
+        "overhead_ratio": ratio,
+        "barrier_dispatches": barrier_rep.n_dispatches,
+        "fused_dispatches": fused_rep.n_dispatches,
+        "collective_dispatches": fused_rep.n_collective_dispatches,
+        "consumed_ici_bytes": fused_rep.consumed.ici_total,
+        "emulated_ici_bytes": fused_rep.emulated_ici_bytes,
+        "consumed_identical": fused_rep.consumed == barrier_rep.consumed,
+    }))
+
+
+def run_collective_scenario(fast: bool) -> dict:
+    """Spawn the forced-device child and collect its JSON row."""
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS")
+    env["XLA_FLAGS"] = ((f"{flags} " if flags else "")
+                        + "--xla_force_host_platform_device_count=2")
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    old = env.get("PYTHONPATH", "")
+    env["PYTHONPATH"] = src + (os.pathsep + old if old else "")
+    args = [sys.executable, "-m", "benchmarks.bench_dispatch",
+            "--collective-child"] + (["--fast"] if fast else [])
+    out = subprocess.run(args, capture_output=True, text=True, env=env,
+                         timeout=560, cwd=os.path.dirname(src))
+    if out.returncode != 0:
+        raise RuntimeError("collective dispatch child failed:\n"
+                           + out.stdout + "\n" + out.stderr)
+    return json.loads(out.stdout.strip().splitlines()[-1])
 
 
 def main(fast: bool = False):
@@ -65,6 +167,8 @@ def main(fast: bool = False):
         "consumed_hbm_bytes": legacy_rep.consumed.hbm_bytes,
         "consumed_identical": legacy_rep.consumed == fused_rep.consumed,
     }]
+    coll_row = run_collective_scenario(fast)
+    rows.append({"scenario": "collective", **coll_row})
     emit("dispatch", rows)
     # Regression guard only: an idle host measures >=3x (the recorded
     # headline in experiments/results/dispatch.json); 2x keeps the CI smoke
@@ -76,4 +180,7 @@ def main(fast: bool = False):
 
 
 if __name__ == "__main__":
-    main()
+    if "--collective-child" in sys.argv:
+        _collective_child(fast="--fast" in sys.argv)
+    else:
+        main(fast="--fast" in sys.argv)

@@ -5,10 +5,10 @@ profile once (static watcher over compiled HLO, or runtime /proc watchers)
 -> emulate anywhere (resource atoms on any host/mesh)
 -> predict TTC on hardware you don't have (roofline terms per sample).
 """
-from repro.core.atoms import (CollectiveAtom, CollectiveSpec,  # noqa
-                              ComputeAtom, ComputeSpec, MemoryAtom,
-                              MemorySpec, Plan, PlanCache, StorageAtom,
-                              StorageSpec)
+from repro.core.atoms import (CollectiveAtom, CollectiveQuant,  # noqa
+                              CollectiveSpec, ComputeAtom, ComputeSpec,
+                              MemoryAtom, MemorySpec, Plan, PlanCache,
+                              StorageAtom, StorageSpec, collective_factor)
 from repro.core.calibrate import HostCalibration, calibrate  # noqa
 from repro.core.emulator import (EmulationReport, Emulator,  # noqa
                                  EmulatorSpec, FleetReport)

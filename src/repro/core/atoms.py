@@ -169,6 +169,64 @@ class StorageSpec:
         return StorageAtom(calib, block_bytes=self.block_bytes)
 
 
+#: per-shard float32 elements one fused collective iteration moves (the
+#: collective analogue of ComputeAtom.tile / MemoryAtom.block_bytes — the
+#: schedule compiler quantizes wire bytes into repeats of this block)
+COLL_BLOCK_ELEMS = 1 << 15
+
+
+def collective_factor(kind: str, n: int) -> float:
+    """Ring-model wire bytes per chip per shard byte for a collective over
+    an ``n``-way axis (all-reduce moves ``2*(n-1)/n`` of the shard, …)."""
+    return {"all-reduce": 2.0 * (n - 1) / n,
+            "all-gather": (n - 1) / n,
+            "collective-permute": 1.0}.get(kind, 2.0 * (n - 1) / n)
+
+
+@dataclass(frozen=True)
+class CollectiveQuant:
+    """Picklable wire-byte quantization for fused collective segments.
+
+    Derivable from a live ``CollectiveAtom`` (``atom.quant()``) *or* from a
+    (``CollectiveSpec``, mesh-spec) pair on a host that owns no mesh at all
+    (``CollectiveSpec.quant_for``) — which is what lets a meshless parent
+    compile schedule tables bit-identical to the ones its mesh-owning fleet
+    workers would compile.  One iteration is one shard_map'd collective call
+    over a fixed ``block_elems``-per-shard float32 block, so the emulated
+    wire amount is ``iters * wire_bytes_per_iter`` — quantized exactly like
+    compute flops and memory bytes are.
+    """
+    n: int                               # collective axis size
+    kind: str = "all-reduce"
+    block_elems: int = COLL_BLOCK_ELEMS
+
+    @property
+    def factor(self) -> float:
+        return collective_factor(self.kind, self.n)
+
+    @property
+    def wire_bytes_per_iter(self) -> float:
+        return self.factor * 4.0 * self.block_elems
+
+    def iters_for(self, wire_bytes: float) -> int:
+        per_iter = self.wire_bytes_per_iter
+        if per_iter <= 0.0:        # n == 1: there is no wire to move
+            return 0
+        return max(int(round(wire_bytes / per_iter)), 0)
+
+    def emulated_bytes(self, iters: int) -> float:
+        return iters * self.wire_bytes_per_iter
+
+    def to_dict(self) -> Dict:
+        return {"n": self.n, "kind": self.kind,
+                "block_elems": self.block_elems}
+
+    @staticmethod
+    def from_dict(d) -> "CollectiveQuant":
+        return CollectiveQuant(n=int(d["n"]), kind=str(d["kind"]),
+                               block_elems=int(d["block_elems"]))
+
+
 @dataclass(frozen=True)
 class CollectiveSpec:
     axis: Optional[str] = None           # None: the mesh's last axis
@@ -176,6 +234,18 @@ class CollectiveSpec:
 
     def build(self, mesh) -> "CollectiveAtom":
         return CollectiveAtom(mesh, axis=self.axis, kind=self.kind)
+
+    def quant_for(self, mesh_spec) -> CollectiveQuant:
+        """Quantization for the mesh a *worker* will build from
+        ``mesh_spec`` (anything with ``shape``/``axes``, e.g.
+        ``repro.fleet.MeshSpec``) — no live mesh required."""
+        axes = tuple(mesh_spec.axes)
+        axis = self.axis if self.axis is not None else axes[-1]
+        if axis not in axes:
+            raise ValueError(f"collective axis {axis!r} not in mesh axes "
+                             f"{axes}")
+        return CollectiveQuant(n=int(mesh_spec.shape[axes.index(axis)]),
+                               kind=self.kind)
 
 
 class Atom:
@@ -375,9 +445,44 @@ class CollectiveAtom(Atom):
         self.axis = axis or (mesh.axis_names[-1] if mesh is not None else None)
         self.kind = kind
         self._fns: Dict[int, Callable] = {}
+        self._loop_fn: Optional[Callable] = None
 
     def spec(self) -> CollectiveSpec:
         return CollectiveSpec(axis=self.axis, kind=self.kind)
+
+    def quant(self) -> CollectiveQuant:
+        """This atom's fused-segment quantization (needs the mesh)."""
+        return CollectiveQuant(n=self.mesh.shape[self.axis], kind=self.kind)
+
+    def loop_operand(self, block_elems: int = COLL_BLOCK_ELEMS):
+        """The fused scan's collective carry: one fixed block per shard."""
+        n = self.mesh.shape[self.axis]
+        return jnp.ones((n * block_elems,), jnp.float32)
+
+    def loop_body(self) -> Callable:
+        """One fused collective iteration: a shape-invariant shard_map'd
+        collective over the fixed block — unlike ``_coll_fn`` (whose
+        all-gather grows its output), the result always matches the input
+        shape so ``lax.scan``/``fori_loop`` can carry it.  Values are kept
+        bounded (psum rescaled by 1/n) because one segment may loop
+        thousands of iterations."""
+        if self._loop_fn is None:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            mesh, axis, kind = self.mesh, self.axis, self.kind
+            n = mesh.shape[axis]
+
+            def local(x):
+                if kind == "all-gather":
+                    return jax.lax.all_gather(x, axis)[0]
+                if kind == "collective-permute":
+                    perm = [(i, (i + 1) % n) for i in range(n)]
+                    return jax.lax.ppermute(x, axis, perm)
+                return jax.lax.psum(x, axis) * (1.0 / n)
+
+            self._loop_fn = shard_map(local, mesh=mesh, in_specs=P(axis),
+                                      out_specs=P(axis), check_rep=False)
+        return self._loop_fn
 
     def _coll_fn(self, n_elems: int):
         if n_elems not in self._fns:
@@ -401,32 +506,42 @@ class CollectiveAtom(Atom):
             self._fns[n_elems] = jax.jit(fn)
         return self._fns[n_elems]
 
+    def quantized_wire_bytes(self, n_elems: int) -> float:
+        """The wire bytes an ``n_elems``-operand plan actually emulates
+        (the ring model applied to the quantized per-chip shard) — note
+        tiny amounts clamp UP to one element per shard, so a sub-``4n``-byte
+        leg emulates more than it consumes; the emulator reports this as
+        ``emulated_ici_bytes`` so predicted-vs-emulated stays honest."""
+        n = self.mesh.shape[self.axis]
+        factor = collective_factor(self.kind, n)
+        return factor * 4.0 * n_elems / n
+
     def plan(self, wire_bytes: float) -> Plan:
         if self.mesh is None or wire_bytes <= 0:
             return Plan.noop()
         n = self.mesh.shape[self.axis]
         # invert the ring model on the PER-CHIP shard:
         # wire/chip = factor * shard_bytes  (all-reduce: 2*(n-1)/n)
-        factor = {"all-reduce": 2.0 * (n - 1) / n,
-                  "all-gather": (n - 1) / n,
-                  "collective-permute": 1.0}.get(self.kind, 2.0 * (n - 1) / n)
+        factor = collective_factor(self.kind, n)
         shard_bytes = wire_bytes / max(factor, 1e-9)
         n_elems = max(int(shard_bytes / 4) * n, n)
         n_elems = (n_elems // n) * n or n
         # Quantized key: amounts rounding to the same shard size share one
-        # plan (cache sharers report the first builder's wire_bytes — the
-        # emulator tracks consumption from the profile, not thunk returns).
+        # plan, and — like ComputeAtom/MemoryAtom — the plan reports the
+        # QUANTIZED amount it emulates, never the builder's raw wire_bytes,
+        # so every cache sharer agrees on what was moved (the emulator
+        # tracks *consumption* from the profile, and *emulation* from this).
         # Mesh identity is part of the key: a shared cache may serve
         # emulators on different meshes, and a shard_map is bound to its.
         mesh_id = (tuple(sorted(self.mesh.shape.items())),
                    tuple(d.id for d in self.mesh.devices.flat))
         key = ("collective", self.kind, self.axis, mesh_id, n_elems)
-        return self._cached(key, lambda: self._build_plan(n_elems, wire_bytes))
+        return self._cached(key, lambda: self._build_plan(n_elems))
 
-    def _build_plan(self, n_elems: int, wire_bytes: float) -> Plan:
+    def _build_plan(self, n_elems: int) -> Plan:
         fn = self._coll_fn(n_elems)
         x = jnp.ones((n_elems,), jnp.float32)
-        return Plan(lambda: fn(x), wire_bytes)
+        return Plan(lambda: fn(x), self.quantized_wire_bytes(n_elems))
 
     def seconds(self, wire_bytes: float, hw: HardwareSpec) -> float:
         bw = hw.ici_bw * hw.ici_derate

@@ -64,7 +64,19 @@ class EmulationReport:
     planned: Optional[ResourceVector] = None
     mode: str = "per_sample"             # "fused" | "per_sample"
     n_dispatches: int = 0                # device dispatches issued
-    n_collective_dispatches: int = 0     # of which executable collectives
+    #: executed wire legs (fused rows / barrier launches), counted the same
+    #: on every path — fused, barrier fallback, and fleet workers — for
+    #: legs of at least one quantization iteration.  Below that the paths
+    #: quantize at different granularities and honestly diverge: a fused
+    #: row rounds sub-half-block legs to a no-op (like compute/memory
+    #: rows), while CollectiveAtom.plan clamps up to one element per shard
+    #: (tests/test_collectives_fused.py pins both).
+    n_collective_dispatches: int = 0
+    #: wire bytes actually moved after quantization — tiny legs clamp UP
+    #: (CollectiveAtom pads sub-4n-byte amounts to one element per shard),
+    #: so this can exceed consumed.ici_total; comparing predicted vs
+    #: emulated must use this, not the profile amount
+    emulated_ici_bytes: float = 0.0
 
     def summary(self) -> Dict:
         return {"command": self.command, "ttc_s": self.ttc_s,
@@ -74,6 +86,7 @@ class EmulationReport:
                 "flops": self.consumed.flops,
                 "hbm_bytes": self.consumed.hbm_bytes,
                 "ici_bytes": self.consumed.ici_total,
+                "emulated_ici_bytes": self.emulated_ici_bytes,
                 "storage_read_bytes": self.consumed.storage_read_bytes,
                 "storage_write_bytes": self.consumed.storage_write_bytes}
 
@@ -134,7 +147,8 @@ class EmulatorSpec:
                       storage_block=self.storage.block_bytes,
                       efficiency=self.compute.efficiency, speed=self.speed)
         if mesh is not None:
-            em.collective = (self.collective or CollectiveSpec()).build(mesh)
+            em.attach_collective(
+                (self.collective or CollectiveSpec()).build(mesh))
         return em
 
 
@@ -164,7 +178,8 @@ class Emulator:
         # atom kernels don't take; those backends fall back to per-sample.
         self._fusable = backend == "jnp"
         self._segments = SegmentRunner(tile=compute_tile,
-                                       block_bytes=mem_block)
+                                       block_bytes=mem_block,
+                                       collective=self.collective)
         if plan_cache is not None:
             self.set_plan_cache(plan_cache)
 
@@ -177,6 +192,16 @@ class Emulator:
         if self.collective is not None:
             self.collective.cache = cache
 
+    def attach_collective(self, atom: CollectiveAtom) -> None:
+        """Install a (mesh-bound) collective atom after construction,
+        keeping the segment runner's mesh-bound programs and the plan
+        cache routing in sync — ``EmulatorSpec.build`` uses this to give
+        fleet workers their per-worker mesh."""
+        self.collective = atom
+        self._segments.set_collective(atom)
+        if self.plan_cache is not None:
+            atom.cache = self.plan_cache
+
     def spec(self) -> EmulatorSpec:
         """This emulator's picklable recipe (see ``EmulatorSpec``)."""
         return EmulatorSpec(
@@ -188,17 +213,26 @@ class Emulator:
 
     def compile(self, profile: SynapseProfile, *, flops_scale: float = 1.0,
                 mem_scale: float = 1.0,
-                keep_collectives: Optional[bool] = None) -> CompiledSchedule:
+                keep_collectives: Optional[bool] = None,
+                mesh_spec=None) -> CompiledSchedule:
         """Lower a profile to its fused schedule (inspection / pre-warm /
-        detach-and-ship).  ``keep_collectives=True`` lowers wire-byte runs
-        to barrier steps even without a local mesh — for schedules shipped
-        to fleet workers that own one."""
+        detach-and-ship).  ``mesh_spec`` quantizes wire-byte runs into
+        mesh-bound segment rows for the mesh the *workers* will build —
+        this process needs no mesh of its own.  ``keep_collectives=True``
+        is the barrier-step fallback instead: wire runs replay per-sample
+        through the replaying emulator's CollectiveAtom."""
+        quant = None
+        if mesh_spec is not None:
+            spec = (self.collective.spec() if self.collective is not None
+                    else CollectiveSpec())
+            quant = spec.quant_for(mesh_spec)
         return compile_schedule(_collapse(profile.samples),
                                 compute=self.compute, memory=self.memory,
                                 collective=self.collective,
                                 flops_scale=flops_scale,
                                 mem_scale=mem_scale, speed=self.speed,
-                                keep_collectives=keep_collectives)
+                                keep_collectives=keep_collectives,
+                                collective_quant=quant)
 
     def _plan_sample(self, r: ResourceVector, flops_scale=1.0,
                      storage_scale=1.0, mem_scale=1.0):
@@ -232,8 +266,9 @@ class Emulator:
                         storage_scale, mem_scale, consumed, per_sample,
                         verify: bool):
         """Replay one collapsed run the per-sample way; returns the updated
-        consumed vector, the number of device dispatches issued, and how
-        many of those were executable collectives.
+        consumed vector, the number of device dispatches issued, how many
+        of those were executable collectives, and the quantized wire bytes
+        those collectives emulated.
 
         Consecutive identical samples with no storage leg execute as a
         single fused consumption (count × amounts): ordering semantics only
@@ -250,6 +285,7 @@ class Emulator:
             rr, flops_scale, storage_scale, mem_scale)
         dispatches = 0
         coll_dispatches = 0
+        emulated_ici = 0.0
         for _ in range(reps):
             t0 = time.perf_counter()
 
@@ -266,7 +302,9 @@ class Emulator:
                 tok = t.launch()
                 if tok is not None:                 # noop plans don't count
                     tokens.append(tok)
-                    coll_dispatches += kind == "ici"
+                    if kind == "ici":
+                        coll_dispatches += 1
+                        emulated_ici += t.amount    # quantized, see atoms
             dispatches += len(tokens)
             if tokens:
                 jax.block_until_ready(tokens)       # one sync per sample
@@ -275,7 +313,7 @@ class Emulator:
             per_sample.append(time.perf_counter() - t0)
             if verify:
                 consumed = consumed.add(rr)
-        return consumed, dispatches, coll_dispatches
+        return consumed, dispatches, coll_dispatches, emulated_ici
 
     def replay(self, sched: CompiledSchedule, *, command: str = "",
                planned: Optional[ResourceVector] = None,
@@ -288,14 +326,37 @@ class Emulator:
         a schedule compiled in one process can be shipped (see
         ``CompiledSchedule.detach``) and replayed by a fleet worker's own
         emulator with identical consumption accounting: segments run as one
-        dispatch each, barrier steps replay per-sample through this
-        emulator's atoms — including collective legs when this emulator
-        owns a mesh.
+        dispatch each — mesh-bound segments execute their wire rows inside
+        that same dispatch on this emulator's mesh — and barrier steps
+        replay per-sample through this emulator's atoms, including
+        collective legs when this emulator owns a mesh.
         """
+        if sched.mesh_bound:
+            if self.collective is None or self.collective.mesh is None:
+                raise RuntimeError(
+                    "schedule carries mesh-bound collective segments but "
+                    "this emulator owns no mesh; recompile it with "
+                    "keep_collectives=True (barrier fallback) or build the "
+                    "emulator with a mesh")
+            mine = self.collective.quant()
+            want = sched.collective_quant
+            if want is None:
+                raise RuntimeError(
+                    "mesh-bound schedule carries no collective_quant — "
+                    "its tables cannot be validated against this mesh; "
+                    "recompile it (compile_schedule records the quant "
+                    "whenever it fuses wire runs)")
+            if want != mine:
+                raise RuntimeError(
+                    f"schedule was quantized for {want} but this "
+                    f"emulator's mesh gives {mine}; replaying would emulate "
+                    "skewed wire amounts — recompile for this mesh")
         consumed = ResourceVector()
         per_sample: List[float] = []
         dispatches = 0
         coll_dispatches = 0
+        emulated_ici = 0.0
+        quant = sched.collective_quant
         t_start = time.perf_counter()
         for step in sched.steps:
             if isinstance(step, FusedSegment):
@@ -303,6 +364,12 @@ class Emulator:
                 dispatched = self._segments.run(step)  # ONE dispatch+sync
                 dt = time.perf_counter() - t0
                 dispatches += int(dispatched)
+                if step.mesh_bound:
+                    # one executed wire leg per collective-bearing row —
+                    # the same granularity the barrier fallback counts at
+                    coll_dispatches += int((step.table[:, 2] > 0).sum())
+                    emulated_ici += quant.emulated_bytes(
+                        step.collective_iters)
                 # apportion the segment's wall time across its rows so
                 # per_sample_s keeps one entry per executed sample
                 per_sample.extend([dt / step.n_rows] * step.n_rows)
@@ -310,18 +377,20 @@ class Emulator:
                     for rr in step.rows:
                         consumed = consumed.add(rr)
             else:
-                consumed, d, c = self._run_per_sample(
+                consumed, d, c, e = self._run_per_sample(
                     step.resources, step.count, flops_scale,
                     storage_scale, mem_scale, consumed, per_sample,
                     verify)
                 dispatches += d
                 coll_dispatches += c
+                emulated_ici += e
         ttc = time.perf_counter() - t_start
         return EmulationReport(command=command, ttc_s=ttc,
                                n_samples=len(per_sample), consumed=consumed,
                                per_sample_s=per_sample, planned=planned,
                                mode="fused", n_dispatches=dispatches,
-                               n_collective_dispatches=coll_dispatches)
+                               n_collective_dispatches=coll_dispatches,
+                               emulated_ici_bytes=emulated_ici)
 
     def emulate(self, profile: SynapseProfile, *, flops_scale: float = 1.0,
                 storage_scale: float = 1.0, mem_scale: float = 1.0,
@@ -346,12 +415,14 @@ class Emulator:
         per_sample: List[float] = []
         dispatches = 0
         coll_dispatches = 0
+        emulated_ici = 0.0
         for r, count in runs:
-            consumed, d, c = self._run_per_sample(
+            consumed, d, c, e = self._run_per_sample(
                 r, count, flops_scale, storage_scale, mem_scale,
                 consumed, per_sample, verify)
             dispatches += d
             coll_dispatches += c
+            emulated_ici += e
         ttc = time.perf_counter() - t_start
         return EmulationReport(command=profile.command, ttc_s=ttc,
                                n_samples=len(per_sample), consumed=consumed,
@@ -359,7 +430,8 @@ class Emulator:
                                planned=profile.totals,
                                mode="per_sample",
                                n_dispatches=dispatches,
-                               n_collective_dispatches=coll_dispatches)
+                               n_collective_dispatches=coll_dispatches,
+                               emulated_ici_bytes=emulated_ici)
 
     def emulate_many(self, profiles: List[SynapseProfile], *,
                      max_workers: int = 4, flops_scale: float = 1.0,

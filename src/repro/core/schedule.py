@@ -7,25 +7,36 @@ fidelity wants *finer* samples, the old loop made them *more* expensive).
 This module lowers a collapsed run list into a small number of fused device
 programs instead:
 
-  * contiguous **storage-free, collective-free** runs are packed into a
-    ``FusedSegment``: an int32 iteration table with one row per run
-    (compute-burn iters, memory-stream iters), quantized exactly like the
-    atoms quantize (``ComputeAtom.iters_for`` / ``MemoryAtom.iters_for``,
-    applied to the count-scaled run amounts).  A segment executes as ONE
-    jitted ``lax.scan`` over its table — the scan carries the compute tile
-    and memory block through every row in order, so the cross-sample
-    ordering contract holds *inside* the program and an M-sample profile
-    costs O(storage-segment boundaries) dispatches instead of O(M × atoms).
-  * runs with a storage leg (host I/O worker interleave) or an executable
-    collective (bound to its mesh via shard_map) stay ``BarrierStep``s and
-    replay through the legacy per-sample path, splitting the segments
-    around them — exactly where the ordering contract demands a real
-    barrier.
+  * contiguous **storage-free** runs are packed into a ``FusedSegment``:
+    an int32 iteration table with one row per run (compute-burn iters,
+    memory-stream iters, collective iters), quantized exactly like the
+    atoms quantize (``ComputeAtom.iters_for`` / ``MemoryAtom.iters_for`` /
+    ``CollectiveQuant.iters_for``, applied to the count-scaled run
+    amounts).  A segment executes as ONE jitted ``lax.scan`` over its
+    table — the scan carries the compute tile, the memory block, and (for
+    **mesh-bound** segments, i.e. those with wire-byte rows) a fixed
+    shard_map-collective block through every row in order, so the
+    cross-sample ordering contract holds *inside* the program and an
+    M-sample profile costs O(storage-segment boundaries) dispatches
+    instead of O(M × atoms) — communication-heavy profiles included.
+  * runs with a storage leg (host I/O worker interleave) stay
+    ``BarrierStep``s and replay through the legacy per-sample path,
+    splitting the segments around them — exactly where the ordering
+    contract demands a real barrier.  ``keep_collectives=True`` lowers
+    wire-byte runs to barrier steps too: the fallback for meshless parents
+    that cannot quantize a collective (no mesh, no ``CollectiveQuant``).
 
-Tables are padded to power-of-two lengths with (0, 0) no-op rows, so one
+Wire-byte quantization is a picklable ``CollectiveQuant`` (axis size +
+kind + block), so a parent with *no mesh at all* compiles tables
+bit-identical to the ones its mesh-owning fleet workers would compile —
+mesh-bound segments ship through ``detach()``/``rehydrate_schedule`` like
+any other, and the quant rides along for the worker to validate against
+its own mesh.
+
+Tables are padded to power-of-two lengths with all-zero no-op rows, so one
 ``SegmentRunner`` compiles at most O(log max-segment-length) programs per
-(tile, block) configuration and every segment of a profile — and of every
-profile in a fleet sharing the runner — reuses them.
+(tile, block, mesh) configuration and every segment of a profile — and of
+every profile in a fleet sharing the runner — reuses them.
 """
 from __future__ import annotations
 
@@ -37,23 +48,38 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.atoms import (ComputeAtom, MemoryAtom, compute_burn_body,
-                              compute_operand, memory_operand,
-                              memory_stream_body)
+from repro.core.atoms import (CollectiveQuant, ComputeAtom, MemoryAtom,
+                              compute_burn_body, compute_operand,
+                              memory_operand, memory_stream_body)
 from repro.core.metrics import ResourceVector
 
 
 @dataclass
 class FusedSegment:
-    """Contiguous storage/collective-free runs packed into one dispatch.
+    """Contiguous storage-free runs packed into one dispatch.
 
-    ``table`` row i holds (compute_iters, memory_iters) for the i-th run;
-    ``rows`` holds the matching consumed ``ResourceVector`` per run, already
-    count-scaled, in profile order (the emulator adds them in sequence so
-    consumed totals are bit-identical to the per-sample path).
+    ``table`` row i holds (compute_iters, memory_iters, collective_iters)
+    for the i-th run; ``rows`` holds the matching consumed
+    ``ResourceVector`` per run, already count-scaled, in profile order
+    (the emulator adds them in sequence so consumed totals are
+    bit-identical to the per-sample path).  A segment with any nonzero
+    collective iters is **mesh-bound**: executing it needs a
+    ``SegmentRunner`` whose emulator owns a mesh.  Legacy two-column
+    tables (pre-collective payloads, hand-built warmup tables) normalize
+    to three columns with a zero wire column.
     """
-    table: np.ndarray                     # (n_rows, 2) int32
+    table: np.ndarray                     # (n_rows, 3) int32
     rows: List[ResourceVector] = field(default_factory=list)
+
+    def __post_init__(self):
+        t = np.asarray(self.table, dtype=np.int32)
+        if t.ndim != 2 or t.shape[1] not in (2, 3):
+            raise ValueError(f"segment table must be 2-D with 2 or 3 "
+                             f"columns, got shape {t.shape}")
+        if t.shape[1] == 2:
+            t = np.concatenate(
+                [t, np.zeros((t.shape[0], 1), dtype=np.int32)], axis=1)
+        self.table = t
 
     @property
     def n_rows(self) -> int:
@@ -66,6 +92,14 @@ class FusedSegment:
     @property
     def memory_iters(self) -> int:
         return int(self.table[:, 1].sum())
+
+    @property
+    def collective_iters(self) -> int:
+        return int(self.table[:, 2].sum())
+
+    @property
+    def mesh_bound(self) -> bool:
+        return self.collective_iters > 0
 
 
 @dataclass
@@ -81,8 +115,15 @@ ScheduleStep = Union[FusedSegment, BarrierStep]
 
 @dataclass
 class CompiledSchedule:
-    """A profile lowered to fused segments split by barrier steps."""
+    """A profile lowered to fused segments split by barrier steps.
+
+    ``collective_quant`` is the wire-byte quantization the tables were
+    built with — present whenever wire runs were fused into mesh-bound
+    segments, so a replaying emulator can validate that its own mesh
+    matches the one the schedule was quantized for.
+    """
     steps: List[ScheduleStep] = field(default_factory=list)
+    collective_quant: Optional[CollectiveQuant] = None
 
     def detach(self) -> Dict:
         """Lower this schedule to a plain-data payload (ints, floats, dicts,
@@ -102,7 +143,10 @@ class CompiledSchedule:
                 steps.append({"kind": "barrier",
                               "resources": s.resources.to_dict(),
                               "count": int(s.count)})
-        return {"version": 1, "steps": steps}
+        payload = {"version": 2, "steps": steps}
+        if self.collective_quant is not None:
+            payload["collective"] = self.collective_quant.to_dict()
+        return payload
 
     @property
     def segments(self) -> List[FusedSegment]:
@@ -116,28 +160,36 @@ class CompiledSchedule:
     def n_rows(self) -> int:
         return sum(s.n_rows for s in self.segments)
 
+    @property
+    def mesh_bound(self) -> bool:
+        """True when any segment carries executable collective rows."""
+        return any(s.mesh_bound for s in self.segments)
+
     def describe(self) -> Dict[str, int]:
         return {"n_steps": len(self.steps),
                 "n_segments": len(self.segments),
                 "n_barriers": len(self.barriers),
                 "n_rows": self.n_rows,
                 "compute_iters": sum(s.compute_iters for s in self.segments),
-                "memory_iters": sum(s.memory_iters for s in self.segments)}
+                "memory_iters": sum(s.memory_iters for s in self.segments),
+                "collective_iters": sum(s.collective_iters
+                                        for s in self.segments)}
 
 
 def rehydrate_schedule(payload: Dict) -> CompiledSchedule:
     """Rebuild a ``CompiledSchedule`` from a ``CompiledSchedule.detach()``
-    payload.  Tables and resource vectors come back bit-identical."""
-    if not isinstance(payload, dict) or payload.get("version") != 1:
+    payload.  Tables and resource vectors come back bit-identical.
+    Version-1 payloads (two-column tables, pre-fused-collectives) load
+    with a zero wire column."""
+    if not isinstance(payload, dict) or payload.get("version") not in (1, 2):
         raise ValueError(f"unsupported schedule payload: "
                          f"{payload.get('version') if isinstance(payload, dict) else payload!r}")
     steps: List[ScheduleStep] = []
     for s in payload["steps"]:
         kind = s.get("kind")
         if kind == "segment":
-            table = np.asarray(s["table"], dtype=np.int32).reshape(-1, 2)
             steps.append(FusedSegment(
-                table=table,
+                table=np.asarray(s["table"], dtype=np.int32),
                 rows=[ResourceVector.from_dict(r) for r in s["rows"]]))
         elif kind == "barrier":
             steps.append(BarrierStep(
@@ -145,13 +197,16 @@ def rehydrate_schedule(payload: Dict) -> CompiledSchedule:
                 count=int(s["count"])))
         else:
             raise ValueError(f"unknown schedule step kind {kind!r}")
-    return CompiledSchedule(steps=steps)
+    quant = (CollectiveQuant.from_dict(payload["collective"])
+             if payload.get("collective") is not None else None)
+    return CompiledSchedule(steps=steps, collective_quant=quant)
 
 
 def compile_schedule(runs, *, compute: ComputeAtom, memory: MemoryAtom,
                      collective=None, flops_scale: float = 1.0,
                      mem_scale: float = 1.0, speed: float = 1.0,
-                     keep_collectives: Optional[bool] = None
+                     keep_collectives: Optional[bool] = None,
+                     collective_quant: Optional[CollectiveQuant] = None
                      ) -> CompiledSchedule:
     """Lower collapsed (ResourceVector, count) runs into a CompiledSchedule.
 
@@ -161,15 +216,28 @@ def compile_schedule(runs, *, compute: ComputeAtom, memory: MemoryAtom,
     ``iters_for``.  Amounts below one iteration lower to a no-op row, same
     as the atoms' zero-iteration plans.
 
-    ``keep_collectives`` overrides whether runs with wire bytes lower to
-    ``BarrierStep``s (executable collective legs) or fold into fused
-    segments (accounting only).  The default follows ``collective``: with
-    no collective atom there is nothing to execute them on.  A schedule
-    compiled for a process fleet passes ``True`` — the *workers* own
-    meshes even when this process does not.
+    Runs with wire bytes lower three ways:
+
+      * **fused** (default when a quantization is available): the run
+        becomes a segment row whose third column holds collective
+        iterations — the whole run executes inside the segment's one
+        dispatch, on the replaying emulator's mesh.  The quantization
+        comes from ``collective_quant`` if given, else from ``collective``
+        when it is mesh-bound; it is recorded on the schedule so a
+        replayer on a *different* mesh fails loudly instead of emulating
+        skewed wire amounts.
+      * **barrier** (``keep_collectives=True``): the run stays a
+        ``BarrierStep`` replayed per-sample through ``CollectiveAtom`` —
+        the fallback for meshless parents that cannot quantize.
+      * **folded** (``keep_collectives=False``, or no quantization
+        source): wire bytes are accounted in the row's resources but
+        execute nothing — there is no mesh to move them on.
     """
-    if keep_collectives is None:
-        keep_collectives = collective is not None
+    quant = collective_quant
+    if quant is None and collective is not None \
+            and getattr(collective, "mesh", None) is not None:
+        quant = collective.quant()
+    fuse_wire = keep_collectives is None and quant is not None
     steps: List[ScheduleStep] = []
     table_rows: List = []
     vecs: List[ResourceVector] = []
@@ -177,14 +245,14 @@ def compile_schedule(runs, *, compute: ComputeAtom, memory: MemoryAtom,
     def flush():
         if table_rows:
             steps.append(FusedSegment(
-                table=np.asarray(table_rows, dtype=np.int32).reshape(-1, 2),
+                table=np.asarray(table_rows, dtype=np.int32).reshape(-1, 3),
                 rows=list(vecs)))
             table_rows.clear()
             vecs.clear()
 
     for r, count in runs:
         has_storage = (r.storage_read_bytes > 0 or r.storage_write_bytes > 0)
-        has_collective = keep_collectives and r.ici_total > 0
+        has_collective = bool(keep_collectives) and r.ici_total > 0
         if has_storage or has_collective:
             flush()
             steps.append(BarrierStep(resources=r, count=count))
@@ -194,10 +262,13 @@ def compile_schedule(runs, *, compute: ComputeAtom, memory: MemoryAtom,
             if rr.flops > 0 else 0
         mi = memory.iters_for(rr.hbm_bytes * mem_scale / speed) \
             if rr.hbm_bytes > 0 else 0
-        table_rows.append((ci, mi))
+        wi = quant.iters_for(rr.ici_total / speed) \
+            if fuse_wire and rr.ici_total > 0 else 0
+        table_rows.append((ci, mi, wi))
         vecs.append(rr)
     flush()
-    return CompiledSchedule(steps=steps)
+    return CompiledSchedule(steps=steps,
+                            collective_quant=quant if fuse_wire else None)
 
 
 def _next_pow2(n: int) -> int:
@@ -209,20 +280,30 @@ class SegmentRunner:
 
     Programs are specialized to the carries a segment actually needs —
     a compute-only segment must not drag the (potentially tens-of-MB)
-    memory block through its scan, matching the per-sample path where a
-    zero-iteration amount plans to a noop.  One program per (padded
-    length, needs-compute, needs-memory); safe to share across fleet
-    worker threads: the program dict and operand init are guarded, jitted
-    callables are thread-safe, and operands are read-only.
+    memory block (or a shard_map'd collective) through its scan, matching
+    the per-sample path where a zero-iteration amount plans to a noop.
+    One program per (padded length, needs-compute, needs-memory,
+    needs-collective); safe to share across fleet worker threads: the
+    program dict and operand init are guarded, jitted callables are
+    thread-safe, and operands are read-only.
+
+    ``collective`` (a mesh-bound ``CollectiveAtom``) supplies the
+    shard_map'd per-iteration wire step and its fixed-block operand;
+    without one, launching a mesh-bound segment raises — a meshless
+    replayer must recompile with ``keep_collectives=True`` instead of
+    silently dropping wire work.
     """
 
-    def __init__(self, tile: int = 256, block_bytes: int = 1 << 24):
+    def __init__(self, tile: int = 256, block_bytes: int = 1 << 24,
+                 collective=None):
         self.tile = tile
         self.block_bytes = block_bytes
+        self.collective = collective
         self._fns: Dict[tuple, object] = {}
         self._lock = threading.Lock()
         self._xc = None
         self._xm = None
+        self._xcoll = None
 
     def _operands(self):
         if self._xm is None:
@@ -236,29 +317,49 @@ class SegmentRunner:
                     self._xm = memory_operand(self.block_bytes)
         return self._xc, self._xm
 
-    def _fn(self, padded_len: int, with_c: bool, with_m: bool):
-        key = (padded_len, with_c, with_m)
+    def set_collective(self, atom) -> None:
+        """Swap the collective atom, dropping every mesh-bound program and
+        the collective operand — they close over the OLD atom's shard_map
+        mesh, and the program key carries no mesh identity."""
+        with self._lock:
+            self.collective = atom
+            self._xcoll = None
+            self._fns = {k: v for k, v in self._fns.items() if not k[3]}
+
+    def _coll_operand(self):
+        if self._xcoll is None:
+            with self._lock:
+                if self._xcoll is None:
+                    self._xcoll = self.collective.loop_operand()
+        return self._xcoll
+
+    def _fn(self, padded_len: int, with_c: bool, with_m: bool,
+            with_coll: bool):
+        key = (padded_len, with_c, with_m, with_coll)
         fn = self._fns.get(key)
         if fn is None:
             with self._lock:
                 fn = self._fns.get(key)
                 if fn is None:
+                    # one fori_loop block per carried operand, in carry
+                    # order; each burns exactly what the owning atom's
+                    # iteration burns
+                    blocks = []
+                    if with_c:
+                        blocks.append(lambda v, row: jax.lax.fori_loop(
+                            0, row[0], compute_burn_body, v))
+                    if with_m:
+                        blocks.append(lambda v, row: jax.lax.fori_loop(
+                            0, row[1], memory_stream_body, v))
+                    if with_coll:
+                        coll_step = self.collective.loop_body()
+                        blocks.append(lambda v, row: jax.lax.fori_loop(
+                            0, row[2], lambda _, x: coll_step(x), v))
+
                     def segment(carry, table):
-                        def body(carry, row):
-                            if with_c and with_m:
-                                c, m = carry
-                                c = jax.lax.fori_loop(0, row[0],
-                                                      compute_burn_body, c)
-                                m = jax.lax.fori_loop(0, row[1],
-                                                      memory_stream_body, m)
-                                return (c, m), jnp.int32(0)
-                            if with_c:
-                                return jax.lax.fori_loop(
-                                    0, row[0], compute_burn_body,
-                                    carry), jnp.int32(0)
-                            return jax.lax.fori_loop(
-                                0, row[1], memory_stream_body,
-                                carry), jnp.int32(0)
+                        def body(c, row):
+                            return tuple(b(v, row) for b, v
+                                         in zip(blocks, c)), jnp.int32(0)
                         out, _ = jax.lax.scan(body, carry, table)
                         return out
                     fn = jax.jit(segment)
@@ -275,14 +376,30 @@ class SegmentRunner:
         row quantized to zero iterations (nothing to dispatch)."""
         with_c = segment.compute_iters > 0
         with_m = segment.memory_iters > 0
-        if not (with_c or with_m):
+        with_coll = segment.collective_iters > 0
+        if not (with_c or with_m or with_coll):
             return None
+        if with_coll and (self.collective is None
+                          or self.collective.mesh is None):
+            raise RuntimeError(
+                "mesh-bound segment (collective iterations in its table) "
+                "but this runner has no mesh-bound CollectiveAtom; "
+                "recompile the schedule with keep_collectives=True to "
+                "replay wire legs per-sample, or give the emulator a mesh")
         padded = _next_pow2(segment.n_rows)
-        table = np.zeros((padded, 2), dtype=np.int32)
+        table = np.zeros((padded, 3), dtype=np.int32)
         table[:segment.n_rows] = segment.table
-        xc, xm = self._operands()
-        carry = (xc, xm) if (with_c and with_m) else (xc if with_c else xm)
-        return self._fn(padded, with_c, with_m)(carry, table)
+        carry = []
+        if with_c or with_m:       # wire-only segments skip the (big)
+            xc, xm = self._operands()  # compute/memory operands entirely
+            if with_c:
+                carry.append(xc)
+            if with_m:
+                carry.append(xm)
+        if with_coll:
+            carry.append(self._coll_operand())
+        return self._fn(padded, with_c, with_m, with_coll)(tuple(carry),
+                                                           table)
 
     def run(self, segment: FusedSegment) -> bool:
         """Dispatch and sync: the segment's samples are done on return.

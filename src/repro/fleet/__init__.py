@@ -36,6 +36,14 @@ Thread vs process vs remote executor — decision matrix:
   collectives         dropped (no           EXECUTE: each worker  EXECUTE: per-worker
                       per-thread mesh is    owns a mesh built     meshes on every host
                       possible)             from MeshSpec         (per-agent MeshSpec)
+  collectives fused?  n/a without a mesh    YES: with mesh_spec   YES: the same mesh-
+                      (a mesh-owning        the parent quantizes  bound bundles over
+                      parent fuses its      wire runs into mesh-  TCP; agents' workers
+                      own in-process        bound segment rows    run wire rows inside
+                      replays)              (CollectiveQuant);    their segment scans
+                                            workers replay a
+                                            wire-heavy profile
+                                            as ONE scan dispatch
   failure             a crash takes the     worker death reaped,  agent death reaped the
   isolation           whole fleet down      bundle re-queued,     same way; bundles
                                             pool refilled         requeue onto surviving

@@ -87,18 +87,32 @@ class ScheduleBundle:
 
 def bundle_profile(emulator: Emulator, profile: SynapseProfile, *,
                    keep_collectives: Optional[bool] = None,
+                   mesh_spec: Optional[MeshSpec] = None,
                    flops_scale: float = 1.0, storage_scale: float = 1.0,
                    mem_scale: float = 1.0,
                    verify: bool = True) -> ScheduleBundle:
     """Compile one profile on ``emulator`` and detach it into a bundle.
 
-    ``keep_collectives=True`` lowers wire-byte runs to executable barrier
-    steps even though *this* process has no mesh — pass it when the bundle
-    is headed for workers that do (i.e. the fleet has a ``MeshSpec``).
+    ``mesh_spec`` (the fleet's ``MeshSpec``) quantizes wire-byte runs into
+    mesh-bound fused segments for the mesh each worker will build — this
+    process needs no mesh, and the workers replay collectives inside their
+    segment scans instead of per-sample barrier steps.
+    ``keep_collectives=True`` is the barrier-step fallback for parents
+    that know the workers own *a* mesh but not its shape.
     """
+    if mesh_spec is None and keep_collectives is None \
+            and emulator.collective is not None:
+        # a mesh-owning parent compiling for workers of unknown mesh must
+        # not bake ITS OWN mesh's quantization into the bundle — meshless
+        # workers would refuse the mesh-bound segments.  Barrier steps are
+        # the portable lowering (workers with a mesh execute them
+        # per-sample, workers without one skip the wire and keep the
+        # consumed accounting intact).
+        keep_collectives = True
     sched = emulator.compile(profile, flops_scale=flops_scale,
                              mem_scale=mem_scale,
-                             keep_collectives=keep_collectives)
+                             keep_collectives=keep_collectives,
+                             mesh_spec=mesh_spec)
     return ScheduleBundle(command=profile.command, payload=sched.detach(),
                           flops_scale=flops_scale,
                           storage_scale=storage_scale, mem_scale=mem_scale,

@@ -462,11 +462,10 @@ def run_process_fleet(emulator: Emulator, profiles, *, max_workers: int = 4,
     reuse a warm ``ProcessFleet`` (the caller keeps ownership); otherwise a
     pool sized ``min(max_workers, len(profiles))`` is spawned and torn down
     around this one run.  With ``mesh_spec`` set, wire-byte runs compile to
-    executable barrier steps and every worker builds its own mesh — the
-    first fleet mode in which collective legs actually move bytes.
+    mesh-bound fused segments and every worker builds its own mesh —
+    collective legs move bytes inside the workers' segment scans.
     """
-    keep = True if mesh_spec is not None else None
-    bundles = [bundle_profile(emulator, p, keep_collectives=keep,
+    bundles = [bundle_profile(emulator, p, mesh_spec=mesh_spec,
                               flops_scale=flops_scale,
                               storage_scale=storage_scale,
                               mem_scale=mem_scale, verify=verify)

@@ -266,8 +266,7 @@ def run_remote_fleet(emulator: Emulator, profiles, *,
                             hosts=hosts, listen=listen, agents=agents)
     t0 = time.perf_counter()
     try:
-        keep = True if mesh_spec is not None else None
-        bundles = [bundle_profile(emulator, p, keep_collectives=keep,
+        bundles = [bundle_profile(emulator, p, mesh_spec=mesh_spec,
                                   flops_scale=flops_scale,
                                   storage_scale=storage_scale,
                                   mem_scale=mem_scale, verify=verify)

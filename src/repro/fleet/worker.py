@@ -51,9 +51,13 @@ def _init(spec):
         # trace the most common fused program shape (1-row table, both
         # carries) so the first real bundle doesn't pay for it
         em._segments.run(FusedSegment(
-            table=np.asarray([[1, 1]], dtype=np.int32), rows=[]))
+            table=np.asarray([[1, 1, 0]], dtype=np.int32), rows=[]))
         if em.collective is not None:
-            em.collective.plan(float(1 << 10))()   # trace a tiny collective
+            # mesh-bound variant (all three carries) for fused wire rows,
+            # plus a tiny per-sample plan for barrier-fallback bundles
+            em._segments.run(FusedSegment(
+                table=np.asarray([[1, 1, 1]], dtype=np.int32), rows=[]))
+            em.collective.plan(float(1 << 10))()
     return em, {"pid": os.getpid(), "devices": jax.device_count(),
                 "mesh": None if spec.mesh is None else list(spec.mesh.shape),
                 "warm": bool(spec.warmup)}

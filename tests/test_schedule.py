@@ -118,7 +118,7 @@ def test_fused_respects_scales_and_speed():
     sched = em.compile(prof, flops_scale=3.0, mem_scale=0.5)
     runs = _collapse(prof.samples)
     want = [(em.compute.iters_for(r.flops * 3.0 / em.speed),
-             em.memory.iters_for(r.hbm_bytes * 0.5 / em.speed))
+             em.memory.iters_for(r.hbm_bytes * 0.5 / em.speed), 0)
             for r, c in runs]
     got = [tuple(row) for s in sched.segments for row in s.table]
     assert got == want
@@ -146,7 +146,8 @@ def test_subminimum_amounts_are_noop_rows_but_counted():
     prof = _profile([_rv(flops=FPI * 0.2, hbm=BPI * 0.2),
                      _rv(flops=FPI)])
     sched = em.compile(prof)
-    assert [tuple(r) for r in sched.segments[0].table] == [(0, 0), (1, 0)]
+    assert [tuple(r) for r in sched.segments[0].table] == \
+        [(0, 0, 0), (1, 0, 0)]
     fused = em.emulate(prof, fused=True)
     legacy = em.emulate(prof, fused=False)
     assert fused.consumed == legacy.consumed == prof.totals
