@@ -1,4 +1,5 @@
-"""Fleet executor benchmark: thread vs process vs remote, cold vs warm.
+"""Fleet executor benchmark: thread vs process vs remote, cold vs warm —
+plus the streamed-production-day soak (``soak()``).
 
 Replays the same mixed fleet several ways and reports where each
 executor's costs live:
@@ -28,21 +29,51 @@ bit-identical to the in-process replay.  The warm-pool guard catches the
 failure mode that matters architecturally: workers re-tracing per bundle
 instead of once per process would push warm replay toward cold time and
 far past the bound.
+
+``soak()`` is the ISSUE 6 acceptance scenario: a synthetic "production
+day" of profiles streamed through an elastic process fleet at a bounded
+compile-ahead window, never materialized.  Its hard asserts are exact
+(profile amounts are powers of two, so every fold is integer-exact in
+float64): streamed totals == materialized totals == the analytic
+expectation, and coordinator peak-RSS growth is *independent of profile
+count* — a 10x-smaller streamed run must show no less growth (within
+slack) than the full one.  Both suites merge rows into
+``experiments/results/fleet.json`` keyed on a ``scenario`` field.
 """
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
 import time
 
-from benchmarks.common import emit
-from repro.core import Emulator, PlanCache
-from repro.fleet import (ProcessFleet, RemoteFleet, WorkerSpec,
+from benchmarks.common import RESULT_DIR, emit
+from repro.core import (Emulator, PlanCache, ResourceVector, Sample,
+                        SynapseProfile)
+from repro.fleet import (FleetConfig, ProcessFleet, RemoteFleet, WorkerSpec,
                          bundle_profile)
 from repro.scenarios import generate
 
 WORKERS = 2
+
+
+def _emit_fleet(scenario: str, rows):
+    """``emit`` overwrites ``fleet.json``; merge by scenario so the
+    executors row and the soak row coexist in one results file."""
+    path = os.path.join(RESULT_DIR, "fleet.json")
+    merged = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                # rows written before scenario tagging are executors rows
+                merged = [r for r in json.load(f)
+                          if r.get("scenario", "executors") != scenario]
+        except (ValueError, OSError):
+            merged = []
+    for r in rows:
+        r.setdefault("scenario", scenario)
+    emit("fleet", merged + rows)
 
 
 def _spawn_agents(port: int, n: int):
@@ -77,11 +108,12 @@ def main(fast: bool = False):
     profiles = fleet_profiles(k)
     em = Emulator(plan_cache=PlanCache())
 
-    em.emulate_many(profiles, max_workers=WORKERS)          # warm in-process
+    cfg = FleetConfig.thread(max_workers=WORKERS)
+    em.emulate_many(profiles, config=cfg)                   # warm in-process
     thread_fleet = None
     thread_s = float("inf")
     for _ in range(reps):
-        f = em.emulate_many(profiles, max_workers=WORKERS)
+        f = em.emulate_many(profiles, config=cfg)
         if f.wall_s < thread_s:
             thread_s, thread_fleet = f.wall_s, f
 
@@ -158,7 +190,7 @@ def main(fast: bool = False):
         "consumed_identical": identical,
         "remote_consumed_identical": remote_identical,
     }]
-    emit("fleet", rows)
+    _emit_fleet("executors", rows)
     assert identical, \
         "process-fleet totals must be bit-identical to in-process replay"
     # correctness only for the network hop — framing_overhead is reported,
@@ -176,5 +208,143 @@ def main(fast: bool = False):
     return rows
 
 
+# ---------------------------------------------------------------------------
+# streamed production-day soak (ISSUE 6 acceptance)
+# ---------------------------------------------------------------------------
+
+# One soak sample = exactly one quantization iteration of each atom, so the
+# emulated amounts are powers of two and every sum below stays integer-
+# exact in float64 — the exactness the totals asserts lean on.
+_SOAK_TILE = 64                  # 2 * 64^3  = 2^19 flops / iteration
+_SOAK_BLOCK = 1 << 18            # 2 * 2^18  = 2^19 bytes / iteration
+_SOAK_FPI = 2.0 * _SOAK_TILE ** 3
+_SOAK_BPI = 2.0 * _SOAK_BLOCK
+
+
+def _rss_kb() -> int:
+    """Current resident set, not the ru_maxrss high-water mark — the soak
+    needs growth *during* a run, and a monotone mark from warmup would
+    mask it."""
+    with open("/proc/self/statm") as f:
+        pages = int(f.read().split()[1])
+    return pages * (os.sysconf("SC_PAGE_SIZE") // 1024)
+
+
+def _soak_profile(i: int, samples_per: int) -> SynapseProfile:
+    # 7 distinct day shapes so the stream isn't one repeated profile;
+    # amounts stay exact multiples of one iteration
+    rv = ResourceVector(flops=_SOAK_FPI * (1 + i % 7), hbm_bytes=_SOAK_BPI)
+    return SynapseProfile(
+        command=f"soak:{i}",
+        samples=[Sample(index=j, resources=rv) for j in range(samples_per)])
+
+
+def _soak_source(n_profiles: int, samples_per: int, tracker=None):
+    for i in range(n_profiles):
+        if tracker is not None:
+            tracker["peak"] = max(tracker["peak"], _rss_kb())
+        yield _soak_profile(i, samples_per)
+
+
+def _expected_totals(n_profiles: int, samples_per: int):
+    flops = sum(samples_per * int(_SOAK_FPI) * (1 + i % 7)
+                for i in range(n_profiles))
+    return float(flops), float(n_profiles * samples_per * int(_SOAK_BPI))
+
+
+def soak(fast: bool = False):
+    """Replay a synthetic production day as a stream: profiles are pulled,
+    compiled, and shipped at most ``window`` ahead of an elastic 1→3
+    process fleet, with per-profile reports dropped after index-order
+    folding (``collect="totals"``).  Asserts, exactly:
+
+      * streamed totals == materialized fixed-fleet totals (bit-identical)
+        == the analytic expectation — nothing lost or double-counted
+        across backpressure, autoscaling, or completion reordering;
+      * the fleet really scaled (≥1 scale-up, parked back at the floor);
+      * coordinator peak-RSS growth is independent of profile count: the
+        full run may not grow more than a 10x-smaller streamed run plus a
+        fixed slack.
+    """
+    n_profiles = 2_000 if fast else 5_000
+    samples_per = 50 if fast else 200    # 100k / 1M samples
+    window = 8
+    em = Emulator(compute_tile=_SOAK_TILE, mem_block=_SOAK_BLOCK)
+    cfg = FleetConfig.process(max_workers=3, autoscale=True, min_workers=1,
+                              window=window, timeout=3600.0)
+
+    # -- calibration run at a tenth of the size: its RSS growth is the
+    # "profile-count-independent" yardstick (and it warms jax/XLA, so the
+    # big run's growth measures the pipeline, not first-touch allocations)
+    small_n = max(n_profiles // 10, 50)
+    base = _rss_kb()
+    tracker = {"peak": base}
+    em.emulate_many(_soak_source(small_n, samples_per, tracker),
+                    config=cfg, collect="totals")
+    small_growth = tracker["peak"] - base
+
+    # -- the day itself, streamed ------------------------------------------
+    base = _rss_kb()
+    tracker = {"peak": base}
+    t0 = time.perf_counter()
+    streamed = em.emulate_many(
+        _soak_source(n_profiles, samples_per, tracker),
+        config=cfg, collect="totals")
+    stream_wall = time.perf_counter() - t0
+    big_growth = tracker["peak"] - base
+
+    # -- the same profile set materialized on a fixed-size fleet -----------
+    day = [_soak_profile(i, samples_per) for i in range(n_profiles)]
+    t0 = time.perf_counter()
+    fixed = em.emulate_many(day, config=FleetConfig.process(
+        max_workers=3, window=window, timeout=3600.0), collect="totals")
+    fixed_wall = time.perf_counter() - t0
+
+    exp_flops, exp_hbm = _expected_totals(n_profiles, samples_per)
+    rows = [{
+        "n_profiles": n_profiles,
+        "samples_per_profile": samples_per,
+        "n_samples": streamed.n_samples,
+        "window": window,
+        "stream_wall_s": stream_wall,
+        "samples_per_s": streamed.n_samples / stream_wall if stream_wall
+        else 0.0,
+        "materialized_wall_s": fixed_wall,
+        "scale_ups": streamed.scaling.get("scale_ups", 0),
+        "scale_downs": streamed.scaling.get("scale_downs", 0),
+        "peak_workers": streamed.scaling.get("peak_workers", 0),
+        "peak_window": streamed.scaling.get("peak_window", 0),
+        "small_run_rss_growth_kb": small_growth,
+        "rss_growth_kb": big_growth,
+        "total_flops": streamed.totals.flops,
+        "totals_bit_identical": streamed.totals == fixed.totals,
+        "totals_exact": (streamed.totals.flops == exp_flops
+                         and streamed.totals.hbm_bytes == exp_hbm),
+    }]
+    _emit_fleet("soak", rows)
+
+    assert streamed.n_replayed == fixed.n_replayed == n_profiles
+    assert streamed.n_samples == n_profiles * samples_per
+    assert not streamed.reports, "collect='totals' must drop reports"
+    assert streamed.totals == fixed.totals, \
+        "streamed-vs-materialized totals must be bit-identical"
+    assert streamed.totals.flops == exp_flops \
+        and streamed.totals.hbm_bytes == exp_hbm, \
+        f"soak totals drifted from the analytic expectation: " \
+        f"{streamed.totals.flops} != {exp_flops}"
+    assert streamed.scaling.get("scale_ups", 0) >= 1, \
+        "the elastic fleet never scaled up under a backed-up queue"
+    assert streamed.scaling.get("peak_window", 0) <= window
+    # RSS independence: 10x the profiles may not cost more coordinator
+    # memory than the small run did, beyond a fixed allocator-noise slack.
+    slack_kb = 96 * 1024
+    assert big_growth <= small_growth + slack_kb, \
+        f"coordinator RSS grew with profile count: {big_growth}kB for " \
+        f"{n_profiles} profiles vs {small_growth}kB for {small_n} " \
+        f"(+{slack_kb}kB slack) — is the stream being materialized?"
+    return rows
+
+
 if __name__ == "__main__":
     main()
+    soak()

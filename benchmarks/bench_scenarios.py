@@ -55,7 +55,9 @@ def main(fast: bool = False):
                 for _ in range(k)]
     shared = Emulator(plan_cache=PlanCache())
     t0 = time.perf_counter()
-    fleet = shared.emulate_many(profiles, max_workers=min(k, 4))
+    from repro.fleet import FleetConfig
+    fleet = shared.emulate_many(
+        profiles, config=FleetConfig.thread(max_workers=min(k, 4)))
     fleet_wall = time.perf_counter() - t0
 
     # true serial replay, warm shared cache: the honest concurrency baseline

@@ -31,6 +31,9 @@ def main() -> None:
         ("roofline", bench_roofline.main),
         ("scenarios", bench_scenarios.main),
         ("fleet", bench_fleet.main),
+        # substring --only matching: keep this name free of "fleet" so
+        # `--only fleet` doesn't drag the soak along
+        ("soak", bench_fleet.soak),
     ]
     for name, fn in suite:
         if args.only and args.only not in name:

@@ -33,10 +33,10 @@ from __future__ import annotations
 
 import threading
 import time
-from concurrent.futures import ThreadPoolExecutor
-from concurrent.futures import TimeoutError as FuturesTimeout
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor
+from concurrent.futures import wait as futures_wait
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, Iterable, List, Optional
 
 import jax
 
@@ -52,6 +52,20 @@ from repro.core.schedule import (CompiledSchedule, FusedSegment,
 #: fleet backends ``emulate_many``/``run_fleet`` accept (see ``repro.fleet``
 #: for the decision matrix)
 VALID_EXECUTORS = ("thread", "process", "remote")
+
+
+class _Unset:
+    """Sentinel type for 'legacy fleet kwarg not passed', so explicitly
+    passed defaults fold into a ``FleetConfig`` (with the deprecation
+    warning) while silence does not.  Lives here rather than in
+    ``repro.fleet.config`` so ``emulate_many`` can use it in its signature
+    without a core→fleet module-level import."""
+
+    def __repr__(self) -> str:  # pragma: no cover - repr only
+        return "<unset>"
+
+
+UNSET = _Unset()
 
 
 @dataclass
@@ -96,16 +110,28 @@ class FleetReport:
     """Result of ``Emulator.emulate_many``: K profiles replayed concurrently.
 
     ``max_workers`` is the *effective* pool size (requested workers capped
-    at the number of profiles, so tiny fleets don't spawn idle threads)."""
+    at the number of profiles, so tiny fleets don't spawn idle threads; an
+    autoscaled fleet reports its ceiling).  ``totals``/``n_samples``/
+    ``n_replayed`` are aggregates folded in bundle-index order as reports
+    complete — they are the whole result in ``collect="totals"`` mode,
+    where ``reports`` stays empty so coordinator memory is bounded by the
+    compile-ahead window, not the stream length.  ``scaling`` carries the
+    elasticity record of the run (scale_ups/scale_downs/peak_workers/
+    peak_queue_depth/peak_window) when the executor streams through
+    ``FleetBase``."""
     reports: List[EmulationReport]
     wall_s: float                        # concurrent fleet wall time
     serial_s: float                      # sum of per-profile TTCs
     max_workers: int
     cache_stats: Dict[str, int] = field(default_factory=dict)
+    totals: Optional[ResourceVector] = None
+    n_samples: int = 0                   # profile samples replayed
+    n_replayed: int = 0                  # profiles replayed (any collect=)
+    scaling: Dict[str, int] = field(default_factory=dict)
 
     @property
     def n_profiles(self) -> int:
-        return len(self.reports)
+        return self.n_replayed or len(self.reports)
 
     @property
     def speedup(self) -> float:
@@ -117,9 +143,57 @@ class FleetReport:
         return self.serial_s / self.wall_s if self.wall_s else 0.0
 
     def summary(self) -> Dict:
-        return {"n_profiles": self.n_profiles, "wall_s": self.wall_s,
-                "serial_s": self.serial_s, "speedup": self.speedup,
-                "max_workers": self.max_workers, **self.cache_stats}
+        out = {"n_profiles": self.n_profiles, "wall_s": self.wall_s,
+               "serial_s": self.serial_s, "speedup": self.speedup,
+               "max_workers": self.max_workers, **self.cache_stats}
+        if self.n_samples:
+            out["n_samples"] = self.n_samples
+        if self.totals is not None:
+            out["total_flops"] = self.totals.flops
+            out["total_hbm_bytes"] = self.totals.hbm_bytes
+            out["total_ici_bytes"] = self.totals.ici_total
+        if self.scaling:
+            out["scaling"] = dict(self.scaling)
+        return out
+
+
+class ReportFold:
+    """Order-stable aggregate folder for streamed fleet results.
+
+    Workers complete bundles in whatever order the fleet's load (and any
+    autoscaling) dictates, but float summation is not associative-in-
+    practice: folding ``consumed`` totals in completion order would make
+    the aggregate depend on pool size and scale events.  ``ReportFold``
+    buffers out-of-order arrivals and folds strictly in bundle-index
+    order, so the aggregate totals of a streamed, autoscaled fleet are
+    bit-identical to a fixed-size (or fully materialized) run over the
+    same profiles.  The reorder buffer is bounded by the compile-ahead
+    window: index ``i`` can only be outstanding while it is inside the
+    window, so at most ``window`` reports are ever buffered.
+
+    ``keep_reports=False`` (``collect="totals"``) drops each report after
+    folding — the bounded-coordinator-memory soak mode.
+    """
+
+    def __init__(self, keep_reports: bool = True):
+        self.keep_reports = keep_reports
+        self.reports: List[EmulationReport] = []
+        self.totals = ResourceVector()
+        self.serial_s = 0.0
+        self.n_done = 0
+        self._next = 0
+        self._pending: Dict[int, EmulationReport] = {}
+
+    def add(self, idx: int, report: EmulationReport) -> None:
+        self._pending[idx] = report
+        while self._next in self._pending:
+            rep = self._pending.pop(self._next)
+            self._next += 1
+            self.totals = self.totals.add(rep.consumed)
+            self.serial_s += rep.ttc_s
+            self.n_done += 1
+            if self.keep_reports:
+                self.reports.append(rep)
 
 
 @dataclass(frozen=True)
@@ -433,83 +507,105 @@ class Emulator:
                                n_collective_dispatches=coll_dispatches,
                                emulated_ici_bytes=emulated_ici)
 
-    def emulate_many(self, profiles: List[SynapseProfile], *,
-                     max_workers: int = 4, flops_scale: float = 1.0,
-                     storage_scale: float = 1.0, mem_scale: float = 1.0,
-                     verify: bool = True, fused: bool = True,
-                     executor: str = "thread", mesh_spec=None,
-                     hosts=None, listen=None, agents=None,
-                     timeout: float = 600.0) -> FleetReport:
+    def emulate_many(self, profiles: Iterable[SynapseProfile], *,
+                     flops_scale: float = 1.0, storage_scale: float = 1.0,
+                     mem_scale: float = 1.0, verify: bool = True,
+                     fused: bool = True, config=None,
+                     collect: str = "reports",
+                     # legacy fleet kwargs: fold into a FleetConfig with a
+                     # DeprecationWarning — pass config= instead
+                     executor=UNSET, max_workers=UNSET, mesh_spec=UNSET,
+                     hosts=UNSET, listen=UNSET, agents=UNSET,
+                     timeout=UNSET) -> FleetReport:
         """Fleet mode: replay many profiles concurrently.
 
-        ``executor="thread"`` (default) runs every profile on worker
-        threads inside this process, sharing this emulator's atoms through
-        a keyed plan cache — identical (atom, amount) plans are built, and
-        their XLA programs traced, once for the whole fleet instead of once
-        per profile — and sharing the SegmentRunner's fused programs the
-        same way.  ``executor="process"`` compiles each profile to a
+        ``profiles`` is any iterable — a list, or a lazy source like
+        ``ProfileStore.stream(...)``.  Every executor consumes it as a
+        stream: profiles are pulled (and, on process/remote, compiled to
+        bundles) at most ``config.window`` ahead of replay, so the source
+        is backpressured by worker throughput and coordinator memory stays
+        bounded by the window even when the stream is a production day
+        long.  ``collect="totals"`` additionally drops per-profile reports
+        after folding them into ``FleetReport.totals``, the bounded-memory
+        mode for unbounded streams.
+
+        ``config`` (a ``repro.fleet.FleetConfig``) is the one knob surface:
+        ``FleetConfig.thread()`` runs profiles on worker threads inside
+        this process, sharing this emulator's atoms through a keyed plan
+        cache — identical (atom, amount) plans are built, and their XLA
+        programs traced, once for the whole fleet instead of once per
+        profile.  ``FleetConfig.process(...)`` compiles each profile to a
         ``CompiledSchedule`` here, detaches it to a picklable bundle, and
         ships it to a spawn-based worker-process pool
         (``repro.fleet.ProcessFleet``) where each worker owns its own
-        emulator, jitted programs, and — when ``mesh_spec`` (a
-        ``repro.fleet.MeshSpec``) is given — its own device mesh, so
-        collective legs *execute* in fleet mode instead of being dropped.
-        ``executor="remote"`` ships the same bundles over framed TCP to
-        host agents on other machines (``repro.fleet.RemoteFleet``):
-        ``hosts=["h1:9000", ...]`` dials agents already listening
-        (``python -m repro.fleet.agent --listen``), ``listen="host:port"``
-        + ``agents=N`` accepts N dial-in agents
-        (``agent --connect``) — mix freely.  See ``repro.fleet`` for the
-        full thread/process/remote decision matrix.
+        emulator, jitted programs, and — with ``mesh=MeshSpec(...)`` — its
+        own device mesh, so collective legs *execute* in fleet mode.
+        ``FleetConfig.remote(...)`` ships the same bundles over framed TCP
+        to host agents on other machines (``repro.fleet.RemoteFleet``).
+        Process and remote pools can be elastic (``autoscale=True``):
+        capacity is spawned/invited while queued bundles outnumber free
+        slots and retired back to ``min_workers`` when the stream drains,
+        with the scale record in ``FleetReport.scaling``.  See
+        ``repro.fleet`` for the full decision matrix and the legacy-kwarg
+        migration example.
 
-        ``timeout`` bounds each fleet run.  Process and remote executors
-        enforce it strictly (the scheduler deadline); the thread executor
-        stops *starting* profiles at the deadline and raises, but profiles
-        already replaying run to completion — threads can't be preempted.
+        ``config.timeout`` bounds each fleet run.  Process and remote
+        executors enforce it strictly (the scheduler deadline); the thread
+        executor stops *starting* profiles at the deadline and raises, but
+        profiles already replaying run to completion — threads can't be
+        preempted.
 
         Each profile replays on exactly one worker, so the per-profile
         sample-ordering contract is intact; ordering *across* profiles is
         deliberately unconstrained (a fleet has no inter-profile
-        dependencies).  The pool is capped at ``len(profiles)`` so tiny
+        dependencies) — but aggregate ``totals`` are folded in profile
+        order, so they are bit-identical however the fleet is shaped.  A
+        sized ``profiles`` caps the pool at ``len(profiles)`` so tiny
         fleets don't spawn idle workers.
         """
-        if executor not in VALID_EXECUTORS:
-            raise ValueError(
-                f"unknown executor {executor!r}; valid choices: "
-                + ", ".join(repr(e) for e in VALID_EXECUTORS))
-        if executor != "remote" and (hosts is not None or listen is not None
-                                     or agents is not None):
-            raise ValueError("hosts/listen/agents configure "
-                             "executor='remote' agents; they have no "
-                             f"meaning for executor={executor!r}")
-        if executor in ("process", "remote"):
+        from repro.fleet.config import FleetConfig
+        cfg = FleetConfig.fold(
+            config,
+            dict(executor=executor, max_workers=max_workers,
+                 mesh_spec=mesh_spec, hosts=hosts, listen=listen,
+                 agents=agents, timeout=timeout),
+            caller="Emulator.emulate_many")
+        if collect not in ("reports", "totals"):
+            raise ValueError("collect must be 'reports' (keep per-profile "
+                             "reports) or 'totals' (fold aggregates only)")
+        if cfg.executor in ("process", "remote"):
             if not (fused and self._fusable):
-                raise ValueError(f"executor={executor!r} ships compiled "
+                raise ValueError(f"executor={cfg.executor!r} ships compiled "
                                  "schedules and requires the fused jnp "
                                  "replay path (fused=True, backend='jnp')")
-            if executor == "remote":
+            if cfg.executor == "remote":
                 from repro.fleet.transport.remote import run_remote_fleet
-                return run_remote_fleet(self, profiles, hosts=hosts,
-                                        listen=listen, agents=agents,
-                                        mesh_spec=mesh_spec,
+                return run_remote_fleet(self, profiles, hosts=cfg.hosts,
+                                        listen=cfg.listen, agents=cfg.agents,
+                                        mesh_spec=cfg.mesh_spec,
                                         flops_scale=flops_scale,
                                         storage_scale=storage_scale,
                                         mem_scale=mem_scale, verify=verify,
-                                        timeout=timeout)
+                                        timeout=cfg.timeout,
+                                        window=cfg.window,
+                                        autoscale=cfg.autoscale,
+                                        min_workers=cfg.min_workers,
+                                        collect=collect)
             from repro.fleet.executor import run_process_fleet
-            return run_process_fleet(self, profiles, max_workers=max_workers,
-                                     mesh_spec=mesh_spec,
+            return run_process_fleet(self, profiles,
+                                     max_workers=cfg.max_workers,
+                                     mesh_spec=cfg.mesh_spec,
                                      flops_scale=flops_scale,
                                      storage_scale=storage_scale,
                                      mem_scale=mem_scale, verify=verify,
-                                     timeout=timeout)
-        if mesh_spec is not None:
-            raise ValueError("mesh_spec requires executor='process' or "
-                             "'remote': thread workers share one jax "
-                             "client and cannot own per-worker meshes, so "
-                             "the collective legs it asks for would be "
-                             "silently dropped")
-        workers = max(1, min(max_workers, len(profiles)))
+                                     timeout=cfg.timeout, window=cfg.window,
+                                     autoscale=cfg.autoscale,
+                                     min_workers=cfg.min_workers,
+                                     collect=collect)
+        workers = cfg.max_workers
+        if hasattr(profiles, "__len__"):
+            workers = max(1, min(workers, len(profiles)))
+        win = cfg.window if cfg.window is not None else max(2 * workers, 2)
         # One fleet at a time per emulator: the atoms, ephemeral cache
         # attach/detach and scratch-file cleanup are instance state.
         with self._fleet_lock:
@@ -523,31 +619,54 @@ class Emulator:
                 cache = PlanCache()
                 self.set_plan_cache(cache)
             before = cache.stats()
+            fold = ReportFold(keep_reports=collect != "totals")
             try:
                 t0 = time.perf_counter()
-                deadline = time.monotonic() + timeout
+                deadline = time.monotonic() + cfg.timeout
+                source = iter(profiles)
+                exhausted = False
+                next_idx = 0
+                n_samples = 0                    # true profile samples
+                inflight: Dict = {}              # future -> profile index
                 with ThreadPoolExecutor(max_workers=workers) as pool:
-                    futures = [pool.submit(self.emulate, p,
-                                           flops_scale=flops_scale,
-                                           storage_scale=storage_scale,
-                                           mem_scale=mem_scale, verify=verify,
-                                           fused=fused)
-                               for p in profiles]
-                    reports = []
-                    for f in futures:
-                        left = deadline - time.monotonic()
-                        try:
-                            reports.append(f.result(timeout=max(0.0, left)))
-                        except FuturesTimeout:
-                            unfinished = sum(1 for g in futures
-                                             if not g.done())
-                            for g in futures:
-                                g.cancel()       # queued ones never start
-                            raise TimeoutError(
-                                f"fleet run exceeded {timeout}s with "
-                                f"{unfinished} profile(s) unfinished "
-                                "(in-flight thread replays drain before "
-                                "this raises)") from None
+                    try:
+                        while True:
+                            # admission: at most `win` profiles submitted
+                            # but unfinished — a lazy source is pulled (and
+                            # anything it generates materialized) only as
+                            # the pool drains
+                            while not exhausted and len(inflight) < win:
+                                try:
+                                    p = next(source)
+                                except StopIteration:
+                                    exhausted = True
+                                    break
+                                n_samples += len(p.samples)
+                                f = pool.submit(self.emulate, p,
+                                                flops_scale=flops_scale,
+                                                storage_scale=storage_scale,
+                                                mem_scale=mem_scale,
+                                                verify=verify, fused=fused)
+                                inflight[f] = next_idx
+                                next_idx += 1
+                            if not inflight:
+                                break
+                            left = deadline - time.monotonic()
+                            done = futures_wait(
+                                list(inflight), timeout=max(0.0, left),
+                                return_when=FIRST_COMPLETED).done
+                            if not done:
+                                raise TimeoutError(
+                                    f"fleet run exceeded {cfg.timeout}s "
+                                    f"with {len(inflight)} profile(s) "
+                                    "unfinished (in-flight thread replays "
+                                    "drain before this raises)")
+                            for f in done:
+                                fold.add(inflight.pop(f), f.result())
+                    except BaseException:
+                        for f in inflight:
+                            f.cancel()           # queued ones never start
+                        raise
                 wall = time.perf_counter() - t0
             finally:
                 if ephemeral:
@@ -558,10 +677,10 @@ class Emulator:
             after = cache.stats()
             stats = {k: after[k] - before[k] for k in ("plans_built", "hits")}
             stats["size"] = after["size"]
-        return FleetReport(reports=reports, wall_s=wall,
-                           serial_s=sum(r.ttc_s for r in reports),
-                           max_workers=workers,
-                           cache_stats=stats)
+        return FleetReport(reports=fold.reports, wall_s=wall,
+                           serial_s=fold.serial_s, max_workers=workers,
+                           cache_stats=stats, totals=fold.totals,
+                           n_samples=n_samples, n_replayed=fold.n_done)
 
 
 def _collapse(samples: List[Sample]):

@@ -49,6 +49,19 @@ Thread vs process vs remote executor — decision matrix:
                                             pool refilled         requeue onto surviving
                                                                   hosts, late agents can
                                                                   join mid-run
+  streaming source?   YES: profiles pulled  YES: compile→bundle   YES: same windowed
+                      (and generated) at    happens as the        bundle stream over
+                      most ``window``       scheduler pulls, at   TCP; coordinator
+                      ahead of replay       most ``window``       memory bounded by the
+                                            bundles ahead of      window, not the
+                                            dispatch              stream length
+  autoscales?         no (fixed shared      YES: spawns workers   YES: open listener
+                      thread pool)          up to max_workers on  invites late joiners
+                                            queue depth, retires  mid-run (scale-up);
+                                            idle ones to the      idle agents released
+                                            min_workers floor     down to the floor
+                                            when the stream       when the stream
+                                            drains                drains
   best for            small fleets, tiny    large fleets,         fleets bigger than one
                       profiles, tests       collective legs,      machine; real TPU
                                             saturating a host     hosts joining later
@@ -61,9 +74,27 @@ when one machine isn't enough (or the workers must be *other* machines —
 the paper's heterogeneous-resource pitch).  The remaining hop is real
 ``jax.distributed`` TPU workers: an agent whose WorkerSpec carries a
 multi-host mesh instead of a forced-host-device one.
+
+All of those knobs live on one picklable ``FleetConfig`` — the legacy
+``executor=``/``max_workers=``/``mesh_spec=``/``hosts=``/``listen=``/
+``agents=``/``timeout=`` kwarg sprawl on ``emulate_many``/``run_fleet``/
+the CLI still works, but folds into a FleetConfig under a
+DeprecationWarning.  Migrating is mechanical::
+
+    # before
+    em.emulate_many(profiles, executor="process", max_workers=8,
+                    mesh_spec=MeshSpec(shape=(2,), axes=("model",)))
+
+    # after — validated at construction, reusable across surfaces
+    cfg = FleetConfig.process(max_workers=8, autoscale=True, min_workers=2,
+                              mesh=MeshSpec(shape=(2,), axes=("model",)),
+                              window=16)
+    em.emulate_many(store.stream(tags), config=cfg, collect="totals")
+    run_fleet(jobs, profiles=store.stream(tags), config=cfg)
 """
 from repro.fleet.bundle import (MeshSpec, ScheduleBundle,  # noqa: F401
                                 WorkerSpec, bundle_profile)
+from repro.fleet.config import (UNSET, FleetConfig)  # noqa: F401
 from repro.fleet.executor import (FleetBase, Peer, PeerGone,  # noqa: F401
                                   ProcessFleet, run_process_fleet)
 from repro.fleet.transport.remote import (RemoteFleet,  # noqa: F401

@@ -1,0 +1,202 @@
+"""One picklable knob surface for every fleet executor.
+
+``FleetConfig`` collapses the executor sprawl that used to be duplicated
+across ``Emulator.emulate_many``, ``repro.scenarios.run_fleet`` and the
+``repro.scenarios`` CLI — ``executor=``, ``max_workers=``, ``mesh_spec=``,
+``hosts=``, ``listen=``, ``agents=``, ``timeout=`` — plus the streaming
+knobs those surfaces never had: a compile-ahead ``window`` (how many
+bundles the coordinator may hold pulled-but-unfinished, the backpressure
+bound on the iterator-of-bundles pipeline) and ``autoscale`` /
+``min_workers`` (grow the pool on queue depth, park it back at the floor
+when the stream drains).
+
+Everything validates at *construction*: a mesh on the thread executor,
+hosts without the remote executor, ``agents=`` without a listener — all
+fail loudly before any profile is generated, compiled, or shipped.  The
+``thread()`` / ``process()`` / ``remote()`` constructors only expose the
+knobs their executor understands, so misuse is an argument error rather
+than a runtime surprise.  Configs are frozen and picklable, so one object
+can parameterize a CLI invocation, travel in a job description, or be
+compared in tests.
+
+Migration (every surface accepts ``config=``)::
+
+    # before (still works, folds into a FleetConfig + DeprecationWarning)
+    em.emulate_many(profiles, executor="process", max_workers=8,
+                    mesh_spec=MeshSpec(shape=(2,)), timeout=120.0)
+
+    # after
+    cfg = FleetConfig.process(max_workers=8, mesh=MeshSpec(shape=(2,)),
+                              timeout=120.0)
+    em.emulate_many(profiles, config=cfg)
+    run_fleet(jobs, profiles=store.stream(tags), config=cfg)
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, fields
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.core.emulator import UNSET, VALID_EXECUTORS, _Unset
+from repro.fleet.bundle import MeshSpec
+
+#: legacy kwarg names the surfaces fold into a FleetConfig
+LEGACY_FLEET_KWARGS = ("executor", "max_workers", "mesh_spec", "hosts",
+                       "listen", "agents", "timeout")
+
+
+@dataclass(frozen=True)
+class FleetConfig:
+    """Where and how a fleet replays: executor, pool shape, stream shape.
+
+    ``window`` bounds the compile-ahead pipeline: the coordinator holds at
+    most ``window`` bundles pulled from the profile source but not yet
+    finished, blocking the source (and therefore compilation) when workers
+    fall behind.  ``None`` picks ``2 × worker slots`` at run time, which
+    keeps every slot fed while the queue-depth signal stays live.
+
+    ``autoscale`` makes the pool elastic between ``min_workers`` (default
+    1) and ``max_workers``: the scheduler spawns/invites capacity while
+    queued bundles outnumber free slots and retires idle workers (or
+    releases idle remote agents) once the stream drains.  Scale events and
+    high-water marks surface in ``FleetReport.scaling``.
+    """
+
+    executor: str = "thread"
+    max_workers: int = 4
+    min_workers: Optional[int] = None        # autoscale floor (default 1)
+    autoscale: bool = False
+    window: Optional[int] = None             # compile-ahead bundles
+    mesh_spec: Optional[MeshSpec] = None
+    hosts: Optional[Tuple[str, ...]] = None
+    listen: Optional[str] = None
+    agents: Optional[int] = None
+    timeout: float = 600.0
+
+    def __post_init__(self):
+        if self.executor not in VALID_EXECUTORS:
+            raise ValueError(
+                f"unknown executor {self.executor!r}; valid choices: "
+                + ", ".join(repr(e) for e in VALID_EXECUTORS))
+        if self.hosts is not None and not isinstance(self.hosts, tuple):
+            object.__setattr__(self, "hosts", tuple(self.hosts))
+        if self.max_workers < 1:
+            raise ValueError("max_workers must be >= 1")
+        if self.timeout < 0:
+            raise ValueError("timeout must be >= 0")
+        if self.window is not None and self.window < 1:
+            raise ValueError("window must be >= 1 (it bounds compile-ahead "
+                             "bundles in flight)")
+        if self.executor != "remote" and (self.hosts is not None
+                                          or self.listen is not None
+                                          or self.agents is not None):
+            raise ValueError("hosts/listen/agents configure "
+                             "executor='remote' agents; they have no "
+                             f"meaning for executor={self.executor!r}")
+        if self.executor == "remote" and not self.hosts \
+                and self.listen is None:
+            raise ValueError("executor='remote' needs agents to schedule "
+                             "on: pass hosts=[...] to dial listening agents "
+                             "and/or listen='host:port' (+ agents=N) to "
+                             "accept dial-in agents")
+        if self.agents is not None and self.listen is None:
+            raise ValueError("agents=N counts dial-in joins and needs "
+                             "listen='host:port'")
+        if self.mesh_spec is not None and self.executor == "thread":
+            raise ValueError("mesh_spec requires executor='process' or "
+                             "'remote': thread workers share one jax "
+                             "client and cannot own per-worker meshes, so "
+                             "the collective legs it asks for would be "
+                             "silently dropped")
+        if self.autoscale and self.executor == "thread":
+            raise ValueError("autoscale requires executor='process' or "
+                             "'remote': only those pools can spawn/retire "
+                             "workers (threads are a fixed shared pool)")
+        if self.min_workers is not None:
+            if not self.autoscale:
+                raise ValueError("min_workers is the autoscale floor; pass "
+                                 "autoscale=True with it")
+            if not 1 <= self.min_workers <= self.max_workers:
+                raise ValueError(
+                    f"min_workers={self.min_workers} must satisfy "
+                    f"1 <= min_workers <= max_workers={self.max_workers}")
+
+    @property
+    def scale_min(self) -> int:
+        """Effective autoscale floor."""
+        return self.min_workers if self.min_workers is not None else 1
+
+    # -- constructors (each exposes only its executor's knobs) --------------
+
+    @classmethod
+    def thread(cls, max_workers: int = 4, *, window: Optional[int] = None,
+               timeout: float = 600.0) -> "FleetConfig":
+        """In-process thread pool: shared plan cache, no meshes, no
+        elasticity — but the profile source is still pulled lazily with a
+        ``window``-bounded submission queue."""
+        return cls(executor="thread", max_workers=max_workers,
+                   window=window, timeout=timeout)
+
+    @classmethod
+    def process(cls, max_workers: int = 4, *,
+                min_workers: Optional[int] = None, autoscale: bool = False,
+                mesh: Optional[MeshSpec] = None,
+                window: Optional[int] = None,
+                timeout: float = 600.0) -> "FleetConfig":
+        """Spawn-based local worker pool (``repro.fleet.ProcessFleet``)."""
+        return cls(executor="process", max_workers=max_workers,
+                   min_workers=min_workers, autoscale=autoscale,
+                   mesh_spec=mesh, window=window, timeout=timeout)
+
+    @classmethod
+    def remote(cls, hosts: Optional[Sequence[str]] = None, *,
+               listen: Optional[str] = None, agents: Optional[int] = None,
+               mesh: Optional[MeshSpec] = None, autoscale: bool = False,
+               min_workers: Optional[int] = None,
+               window: Optional[int] = None,
+               timeout: float = 600.0) -> "FleetConfig":
+        """TCP host agents (``repro.fleet.RemoteFleet``): dial ``hosts``
+        and/or ``listen`` for dial-in agents.  With ``autoscale`` the open
+        listener keeps inviting late joiners mid-run and idle agents are
+        released once the stream drains (``min_workers`` agents are kept)."""
+        return cls(executor="remote",
+                   hosts=tuple(hosts) if hosts else None, listen=listen,
+                   agents=agents, mesh_spec=mesh, autoscale=autoscale,
+                   min_workers=min_workers, window=window, timeout=timeout)
+
+    # -- legacy folding ------------------------------------------------------
+
+    @classmethod
+    def fold(cls, config: Optional["FleetConfig"], given: Dict,
+             *, caller: str) -> "FleetConfig":
+        """Resolve one call's fleet configuration.
+
+        ``given`` holds only the legacy kwargs the caller explicitly
+        passed.  ``config=`` and legacy kwargs are mutually exclusive;
+        legacy kwargs keep working but fold into a ``FleetConfig`` under a
+        ``DeprecationWarning``.  No config and no legacy kwargs means the
+        defaults (thread pool of 4).
+        """
+        given = {k: v for k, v in given.items()
+                 if v is not UNSET and not isinstance(v, _Unset)}
+        unknown = set(given) - {f.name for f in fields(cls)}
+        if unknown:
+            raise TypeError(f"{caller}: unknown fleet kwarg(s) "
+                            f"{sorted(unknown)}")
+        if config is not None:
+            if given:
+                raise ValueError(
+                    f"{caller} got both config= and legacy fleet kwarg(s) "
+                    f"{sorted(given)}; pass one surface, not both")
+            if not isinstance(config, cls):
+                raise TypeError(f"{caller}: config must be a FleetConfig, "
+                                f"got {type(config).__name__}")
+            return config
+        if not given:
+            return cls()
+        warnings.warn(
+            f"{caller}: fleet kwarg(s) {sorted(given)} are deprecated; "
+            "pass config=repro.fleet.FleetConfig(...) (or its .thread()/"
+            ".process()/.remote() constructors) instead",
+            DeprecationWarning, stacklevel=3)
+        return cls(**given)

@@ -9,6 +9,23 @@ objects — anything with worker slots that can ``dispatch`` a bundle and
 ``recv`` a normalized reply — and never touches a pipe or a socket
 itself.
 
+The interchange is an *iterator of bundles*, not a list: ``stream()``
+pulls from the source only while fewer than ``window`` bundles are
+pulled-but-unfinished, so a lazy source (a generator compiling profiles
+on the fly, ``ProfileStore.stream`` feeding ``bundle_profile``) is
+backpressured by the workers — the coordinator never materializes more
+than a window's worth of compiled schedules no matter how long the
+stream is.  ``run()`` is the materializing wrapper (list in, ordered
+list of reports out) kept for warm-pool callers and tests.
+
+``FleetBase`` also owns admission control and fleet *elasticity*: with
+autoscaling enabled, queued bundles outnumbering free slots grows the
+pool one peer per scheduler pass (``_scale_up`` — ProcessFleet spawns a
+worker, RemoteFleet's open listener admits late joiners), and once the
+source is exhausted idle peers are retired back down to the floor
+(``_retire``).  Scale events and high-water marks are recorded in
+``last_scaling`` and surfaced through ``FleetReport.scaling``.
+
 ``ProcessFleet`` is the local instantiation: each peer is one spawn-based
 worker process (see ``repro.fleet.worker``) behind a multiprocessing
 ``Pipe``, with its own jax client, emulator, jitted programs, and — when
@@ -23,7 +40,7 @@ survivors.
 Scheduling is work-stealing-simple: one in-flight bundle per worker slot,
 next bundle to the first slot that frees up, so a straggler profile never
 blocks the rest of the fleet.  Only when no peer is left alive (and none
-can be refilled) with work still pending does ``run`` raise.
+can be refilled) with work still pending does a run raise.
 """
 from __future__ import annotations
 
@@ -32,9 +49,11 @@ import os
 import time
 from collections import deque
 from multiprocessing import connection as mp_conn
-from typing import Deque, Dict, List, Optional, Sequence, Set, Tuple
+from typing import (Deque, Dict, Iterable, Iterator, List, Optional, Set,
+                    Tuple)
 
-from repro.core.emulator import EmulationReport, Emulator, FleetReport
+from repro.core.emulator import (EmulationReport, Emulator, FleetReport,
+                                 ReportFold)
 from repro.fleet.bundle import ScheduleBundle, WorkerSpec, bundle_profile
 from repro.fleet.worker import worker_loop
 
@@ -113,10 +132,14 @@ class FleetBase:
     """Transport-agnostic bundle scheduler over a pool of ``Peer``s.
 
     Subclasses populate ``self._peers`` and may override ``_refill`` (to
-    respawn replacements after a death), ``_extra_waitables`` /
-    ``_handle_extra`` (to service non-peer readiness, e.g. accepting new
-    agents mid-run), and ``_warming`` (to gate on a minimum pool size).
-    ``worker_deaths`` counts reaped peers across the pool's lifetime.
+    respawn replacements after a death), ``_scale_up`` (to grow the pool
+    when autoscaling), ``_extra_waitables`` / ``_handle_extra`` (to
+    service non-peer readiness, e.g. accepting new agents mid-run),
+    ``_assemble`` (to gate a run on initial pool assembly), and
+    ``_warming`` (to gate warmup on a minimum pool size).
+    ``worker_deaths`` counts reaped peers across the pool's lifetime;
+    ``scale_ups``/``scale_downs`` count elasticity events the same way,
+    and ``last_scaling`` holds the most recent stream's high-water marks.
     """
 
     def __init__(self):
@@ -124,6 +147,14 @@ class FleetBase:
         self._closed = False
         self._epoch = 0
         self.worker_deaths = 0
+        self.scale_ups = 0
+        self.scale_downs = 0
+        #: elasticity policy; subclasses flip these (ProcessFleet ctor,
+        #: RemoteFleet ctor) — base default is a fixed-size pool
+        self._autoscale = False
+        self._scale_min = 1
+        #: high-water marks / event counts of the most recent stream
+        self.last_scaling: Dict[str, int] = {}
 
     # -- pool plumbing ------------------------------------------------------
 
@@ -143,6 +174,23 @@ class FleetBase:
 
     def _refill(self, pending: Deque[int]) -> None:
         """Hook: replace a reaped peer if the transport can."""
+
+    def _scale_up(self) -> bool:
+        """Hook: add one peer of capacity (autoscale).  Returns True if the
+        pool grew.  The base pool cannot grow."""
+        return False
+
+    def _retire(self, peer: Peer) -> None:
+        """Politely release an idle peer (autoscale down).  Not a death:
+        no requeue, no refill, no ``worker_deaths``."""
+        peer.stop()
+        peer.close()
+        self._peers.remove(peer)
+        self.scale_downs += 1
+
+    def _assemble(self, timeout: float) -> None:
+        """Hook: block until the initial pool is usable (RemoteFleet gates
+        the first stream on its join quorum here)."""
 
     def _extra_waitables(self) -> List:
         return []
@@ -201,93 +249,174 @@ class FleetBase:
 
     # -- execution ----------------------------------------------------------
 
-    def run(self, bundles: Sequence[ScheduleBundle], *,
-            timeout: float = 600.0) -> List[EmulationReport]:
-        """Replay every bundle; returns reports in bundle order.
+    def stream(self, bundles: Iterable[ScheduleBundle], *,
+               timeout: float = 600.0, window: Optional[int] = None
+               ) -> Iterator[Tuple[int, EmulationReport]]:
+        """Replay a (possibly lazy) bundle source; yields ``(idx, report)``
+        pairs in completion order.
+
+        This is the iterator-of-bundles contract: the source is pulled
+        only while fewer than ``window`` bundles are outstanding (pulled
+        but unfinished), so a source that compiles on ``next()`` is
+        backpressured by worker throughput and coordinator memory stays
+        bounded by the window, not the stream length.  ``window=None``
+        tracks the pool at ``2 × worker slots`` (recomputed as the pool
+        scales), keeping every slot fed while leaving queue depth visible
+        to the autoscaler.
 
         Raises RuntimeError on a peer-reported replay failure, on a
-        poison bundle (one that outlived ``_MAX_ATTEMPTS`` dispatch
-        attempts across dying workers), or when the whole pool is dead
-        with work still pending; TimeoutError past the deadline.
+        poison bundle (one that outlived the per-bundle dispatch-attempt
+        budget across dying workers), or when the whole pool is dead with
+        work still pending; TimeoutError past the deadline.  Completed
+        bundles are dropped as their reports are yielded — a raised
+        stream's stragglers are recognized by their stale epoch in later
+        runs, exactly like ``run``'s.
         """
         if self._closed:
             raise RuntimeError(f"{type(self).__name__} is closed")
+        self._assemble(timeout)
         # A raised run (worker error, poison bundle, timeout) leaves
         # stragglers replaying on live peers.  Each run gets a fresh
         # epoch: stragglers' late results are recognized by their stale
         # epoch, discarded, and merely free their slot — they are never
-        # returned as this run's reports and never block dispatch forever.
+        # yielded into this run and never block dispatch forever.
         self._epoch += 1
         epoch = self._epoch
-        pending: Deque[int] = deque(range(len(bundles)))
-        attempts = [0] * len(bundles)
-        results: Dict[int, EmulationReport] = {}
+        source = iter(bundles)
+        exhausted = False
+        next_idx = 0
+        held: Dict[int, ScheduleBundle] = {}   # pulled, result not yielded
+        pending: Deque[int] = deque()
+        attempts: Dict[int, int] = {}
         deadline = time.monotonic() + timeout
-        while len(results) < len(bundles):
-            if time.monotonic() > deadline:
-                raise TimeoutError(f"fleet run exceeded {timeout}s with "
-                                   f"{len(bundles) - len(results)} bundle(s) "
-                                   "unfinished")
-            # dispatch to free slots (death noticed on send is handled
-            # exactly like death noticed on receive)
-            for peer in list(self._peers):
-                while pending and peer.free_slots > 0:
-                    if not peer.alive:
-                        self._reap(peer, pending, epoch)
-                        break
-                    idx = pending.popleft()
-                    if attempts[idx] >= _MAX_ATTEMPTS:
-                        raise RuntimeError(
-                            f"bundle {idx} ({bundles[idx].command!r}) failed "
-                            f"{attempts[idx]} dispatch attempts — poison "
-                            "bundle, aborting the fleet run")
-                    attempts[idx] += 1
+        base_ups, base_downs = self.scale_ups, self.scale_downs
+        peak_workers = peak_queue = peak_window = 0
+        try:
+            while True:
+                # -- admission: compile-ahead at most `window` bundles ----
+                cap = sum(p.capacity for p in self._peers) or 1
+                win = window if window is not None else max(2 * cap, 2)
+                while not exhausted and len(held) < win:
                     try:
-                        peer.dispatch(epoch, idx, bundles[idx])
-                    except PeerGone:
-                        pending.appendleft(idx)
-                        attempts[idx] -= 1
-                        self._reap(peer, pending, epoch)
+                        b = next(source)
+                    except StopIteration:
+                        exhausted = True
                         break
-            if not self._peers:
-                raise RuntimeError(
-                    f"all fleet workers died ({self.worker_deaths} death(s)) "
-                    f"with {len(bundles) - len(results)} bundle(s) pending")
-            # collect
-            for obj in self._wait(0.5):
-                peer = self._peer_for(obj)
-                if peer is None:
-                    self._handle_extra(obj)
-                    continue
-                try:
-                    msg = peer.recv()
-                except PeerGone:
-                    self._reap(peer, pending, epoch)
-                    continue
-                kind = msg[0]
-                if kind == "ready":
-                    peer.ready = True
-                elif kind == "ok":
-                    _, e, idx, rep = msg
-                    peer.tasks.discard((e, idx))
-                    if e == epoch:
-                        results[idx] = rep
-                elif kind == "retry":
-                    _, e, idx, _reason = msg
-                    peer.tasks.discard((e, idx))
-                    if e == epoch:
-                        pending.append(idx)
-                elif kind == "err":
-                    _, e, idx, tb = msg
-                    if idx is None:
-                        raise RuntimeError(
-                            f"fleet worker failed on initialization:\n{tb}")
-                    peer.tasks.discard((e, idx))  # terminal either way
-                    if e == epoch:
-                        raise RuntimeError(
-                            f"fleet worker ({peer.describe()}) failed on "
-                            f"bundle {idx} ({bundles[idx].command!r}):\n{tb}")
-        return [results[i] for i in range(len(bundles))]
+                    held[next_idx] = b
+                    pending.append(next_idx)
+                    attempts[next_idx] = 0
+                    next_idx += 1
+                if exhausted and not held:
+                    break
+                peak_window = max(peak_window, len(held))
+                peak_queue = max(peak_queue, len(pending))
+                if time.monotonic() > deadline:
+                    raise TimeoutError(
+                        f"fleet run exceeded {timeout}s with {len(held)} "
+                        "bundle(s) unfinished")
+                # -- dispatch to free slots (death noticed on send is
+                # handled exactly like death noticed on receive)
+                for peer in list(self._peers):
+                    while pending and peer.free_slots > 0:
+                        if not peer.alive:
+                            self._reap(peer, pending, epoch)
+                            break
+                        idx = pending.popleft()
+                        if attempts[idx] >= _MAX_ATTEMPTS:
+                            raise RuntimeError(
+                                f"bundle {idx} ({held[idx].command!r}) "
+                                f"failed {attempts[idx]} dispatch attempts "
+                                "— poison bundle, aborting the fleet run")
+                        attempts[idx] += 1
+                        try:
+                            peer.dispatch(epoch, idx, held[idx])
+                        except PeerGone:
+                            pending.appendleft(idx)
+                            attempts[idx] -= 1
+                            self._reap(peer, pending, epoch)
+                            break
+                # -- elasticity: queue depth drives the pool size ---------
+                if self._autoscale:
+                    if pending and not any(p.alive and p.free_slots > 0
+                                           for p in self._peers):
+                        self._scale_up()
+                    elif exhausted and not pending:
+                        # long tail: peers that already drained go idle
+                        # while stragglers finish — release them early
+                        idle = [p for p in self._peers if not p.tasks]
+                        for p in idle[:len(self._peers) - self._scale_min]:
+                            self._retire(p)
+                peak_workers = max(peak_workers,
+                                   sum(p.capacity for p in self._peers))
+                if not self._peers:
+                    raise RuntimeError(
+                        f"all fleet workers died ({self.worker_deaths} "
+                        f"death(s)) with {len(held)} bundle(s) pending")
+                # -- collect ----------------------------------------------
+                for obj in self._wait(0.5):
+                    peer = self._peer_for(obj)
+                    if peer is None:
+                        self._handle_extra(obj)
+                        continue
+                    try:
+                        msg = peer.recv()
+                    except PeerGone:
+                        self._reap(peer, pending, epoch)
+                        continue
+                    kind = msg[0]
+                    if kind == "ready":
+                        peer.ready = True
+                    elif kind == "ok":
+                        _, e, idx, rep = msg
+                        peer.tasks.discard((e, idx))
+                        if e == epoch:
+                            del held[idx]
+                            attempts.pop(idx, None)
+                            yield idx, rep
+                    elif kind == "retry":
+                        _, e, idx, _reason = msg
+                        peer.tasks.discard((e, idx))
+                        if e == epoch:
+                            pending.append(idx)
+                    elif kind == "err":
+                        _, e, idx, tb = msg
+                        if idx is None:
+                            raise RuntimeError(
+                                "fleet worker failed on initialization:"
+                                f"\n{tb}")
+                        peer.tasks.discard((e, idx))  # terminal either way
+                        if e == epoch:
+                            raise RuntimeError(
+                                f"fleet worker ({peer.describe()}) failed "
+                                f"on bundle {idx} ({held[idx].command!r}):"
+                                f"\n{tb}")
+            # -- natural drain: an elastic pool parks back at its floor ---
+            if self._autoscale:
+                idle = [p for p in self._peers if not p.tasks]
+                for p in idle[:len(self._peers) - self._scale_min]:
+                    self._retire(p)
+        finally:
+            self.last_scaling = {
+                "scale_ups": self.scale_ups - base_ups,
+                "scale_downs": self.scale_downs - base_downs,
+                "peak_workers": peak_workers,
+                "peak_queue_depth": peak_queue,
+                "peak_window": peak_window,
+            }
+
+    def run(self, bundles: Iterable[ScheduleBundle], *,
+            timeout: float = 600.0,
+            window: Optional[int] = None) -> List[EmulationReport]:
+        """Replay every bundle; returns reports in bundle order.
+
+        The materializing wrapper over ``stream`` — same failure
+        semantics, but all reports are held until the source is drained.
+        Prefer consuming ``stream`` directly for unbounded sources.
+        """
+        results: Dict[int, EmulationReport] = {}
+        for idx, rep in self.stream(bundles, timeout=timeout, window=window):
+            results[idx] = rep
+        return [results[i] for i in range(len(results))]
 
     def close(self) -> None:
         if self._closed:
@@ -380,16 +509,27 @@ class _PipePeer(Peer):
 class ProcessFleet(FleetBase):
     """A pool of emulator worker processes that replay ``ScheduleBundle``s.
 
-    The pool is warm state: spawn it once, ``run()`` it many times (each
-    run reuses the workers' traced programs and plan caches), ``close()``
-    it when done — or use it as a context manager.  ``worker_deaths`` and
-    ``respawns`` count recovery events across the pool's lifetime.
+    The pool is warm state: spawn it once, ``run()``/``stream()`` it many
+    times (each run reuses the workers' traced programs and plan caches),
+    ``close()`` it when done — or use it as a context manager.
+    ``worker_deaths`` and ``respawns`` count recovery events across the
+    pool's lifetime.
+
+    With ``autoscale=True`` the pool is elastic: it starts at
+    ``min_workers`` (default 1), the scheduler spawns up to ``n_workers``
+    while queued bundles outnumber free slots, and idle workers are
+    retired back to the floor when a stream drains — so a bursty profile
+    source pays for exactly the workers its queue depth asked for.
     """
 
     def __init__(self, n_workers: int, spec: WorkerSpec, *,
-                 respawn: bool = True, max_respawns: Optional[int] = None):
+                 respawn: bool = True, max_respawns: Optional[int] = None,
+                 min_workers: Optional[int] = None, autoscale: bool = False):
         if n_workers < 1:
             raise ValueError("ProcessFleet needs n_workers >= 1")
+        if min_workers is not None and not autoscale:
+            raise ValueError("min_workers is the autoscale floor; pass "
+                             "autoscale=True with it")
         super().__init__()
         self.spec = spec
         self.n_workers = n_workers
@@ -398,7 +538,13 @@ class ProcessFleet(FleetBase):
         self._respawns_left = (n_workers if max_respawns is None
                                else max_respawns)
         self._ctx = mp.get_context("spawn")
-        for _ in range(n_workers):
+        self._autoscale = autoscale
+        self._scale_max = n_workers
+        self._scale_min = max(1, min_workers or 1) if autoscale else n_workers
+        if self._scale_min > n_workers:
+            raise ValueError(f"min_workers={min_workers} exceeds "
+                             f"n_workers={n_workers}")
+        for _ in range(self._scale_min if autoscale else n_workers):
             self._spawn()
 
     def _spawn(self) -> None:
@@ -436,6 +582,13 @@ class ProcessFleet(FleetBase):
             self.respawns += 1
             self._spawn()
 
+    def _scale_up(self) -> bool:
+        if len(self._peers) >= self._scale_max:
+            return False
+        self._spawn()
+        self.scale_ups += 1
+        return True
+
     @property
     def pids(self) -> List[int]:
         return [p.proc.pid for p in self._peers if p.alive]
@@ -455,37 +608,61 @@ def run_process_fleet(emulator: Emulator, profiles, *, max_workers: int = 4,
                       mesh_spec=None, flops_scale: float = 1.0,
                       storage_scale: float = 1.0, mem_scale: float = 1.0,
                       verify: bool = True, timeout: float = 600.0,
-                      fleet: Optional[ProcessFleet] = None) -> FleetReport:
-    """Compile → detach → ship: one-call process-fleet replay.
+                      fleet: Optional[ProcessFleet] = None,
+                      window: Optional[int] = None, autoscale: bool = False,
+                      min_workers: Optional[int] = None,
+                      collect: str = "reports") -> FleetReport:
+    """Compile → detach → ship, streamed: one-call process-fleet replay.
 
-    Backs ``Emulator.emulate_many(executor="process")``.  Pass ``fleet`` to
-    reuse a warm ``ProcessFleet`` (the caller keeps ownership); otherwise a
-    pool sized ``min(max_workers, len(profiles))`` is spawned and torn down
-    around this one run.  With ``mesh_spec`` set, wire-byte runs compile to
-    mesh-bound fused segments and every worker builds its own mesh —
-    collective legs move bytes inside the workers' segment scans.
+    Backs ``Emulator.emulate_many(executor="process")``.  ``profiles`` may
+    be any iterable — a list or a lazy source like
+    ``ProfileStore.stream(...)``: compilation happens as the scheduler
+    pulls, at most ``window`` bundles ahead of dispatch, so coordinator
+    memory is bounded by the window even for a production day's worth of
+    profiles.  Pass ``fleet`` to reuse a warm ``ProcessFleet`` (the caller
+    keeps ownership); otherwise a pool sized ``min(max_workers,
+    len(profiles))`` (or starting at ``min_workers`` when ``autoscale``)
+    is spawned and torn down around this one run.  With ``mesh_spec`` set,
+    wire-byte runs compile to mesh-bound fused segments and every worker
+    builds its own mesh — collective legs move bytes inside the workers'
+    segment scans.  ``collect="totals"`` drops per-profile reports and
+    returns aggregates only (the bounded-memory soak mode).
     """
-    bundles = [bundle_profile(emulator, p, mesh_spec=mesh_spec,
-                              flops_scale=flops_scale,
-                              storage_scale=storage_scale,
-                              mem_scale=mem_scale, verify=verify)
-               for p in profiles]
+    n_samples = {"n": 0}                 # true profile samples compiled
+
+    def _bundles():
+        for p in profiles:
+            b = bundle_profile(emulator, p, mesh_spec=mesh_spec,
+                               flops_scale=flops_scale,
+                               storage_scale=storage_scale,
+                               mem_scale=mem_scale, verify=verify)
+            n_samples["n"] += b.n_profile_samples
+            yield b
+
     own = fleet is None
     if own:
-        workers = max(1, min(max_workers, len(profiles)))
+        n = len(profiles) if hasattr(profiles, "__len__") else None
+        workers = max(1, min(max_workers, n)) if n is not None \
+            else max(1, max_workers)
         fleet = ProcessFleet(workers, WorkerSpec(emulator=emulator.spec(),
-                                                 mesh=mesh_spec))
+                                                 mesh=mesh_spec),
+                             autoscale=autoscale, min_workers=min_workers)
     t0 = time.perf_counter()
+    fold = ReportFold(keep_reports=collect != "totals")
     try:
-        reports = fleet.run(bundles, timeout=timeout)
+        for idx, rep in fleet.stream(_bundles(), timeout=timeout,
+                                     window=window):
+            fold.add(idx, rep)
+        stats = {"workers": fleet.n_workers,
+                 "worker_deaths": fleet.worker_deaths,
+                 "respawns": fleet.respawns}
+        scaling = dict(fleet.last_scaling)
+        n_workers = fleet.n_workers
     finally:
         if own:
             fleet.close()
     wall = time.perf_counter() - t0
     return FleetReport(
-        reports=reports, wall_s=wall,
-        serial_s=sum(r.ttc_s for r in reports),
-        max_workers=fleet.n_workers,
-        cache_stats={"workers": fleet.n_workers,
-                     "worker_deaths": fleet.worker_deaths,
-                     "respawns": fleet.respawns})
+        reports=fold.reports, wall_s=wall, serial_s=fold.serial_s,
+        max_workers=n_workers, cache_stats=stats, totals=fold.totals,
+        n_samples=n_samples["n"], n_replayed=fold.n_done, scaling=scaling)

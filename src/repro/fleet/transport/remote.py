@@ -42,7 +42,7 @@ import socket
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.emulator import Emulator, FleetReport
+from repro.core.emulator import Emulator, FleetReport, ReportFold
 from repro.fleet.bundle import WorkerSpec, bundle_profile
 from repro.fleet.executor import FleetBase, Peer, PeerGone
 from repro.fleet.transport import framing
@@ -122,16 +122,25 @@ class RemoteFleet(FleetBase):
     """A fleet of host agents reachable over TCP.
 
     Warm state like ``ProcessFleet``: agents join once (spawning and
-    warming their local workers), then many ``run()`` calls reuse their
-    traced programs.  ``worker_deaths`` counts reaped *agents*;
-    ``n_workers`` is the fleet-wide worker-slot total.
+    warming their local workers), then many ``run()``/``stream()`` calls
+    reuse their traced programs.  ``worker_deaths`` counts reaped
+    *agents*; ``n_workers`` is the fleet-wide worker-slot total.
+
+    With ``autoscale=True`` the pool is elastic: the open listener keeps
+    *inviting* capacity mid-run (a late joiner admitted after initial
+    assembly counts as a scale-up), and once a stream's source drains,
+    idle agents beyond the ``min_workers`` floor are *released* — sent the
+    polite ``stop`` frame, so their worker pools exit instead of idling on
+    another machine.
     """
 
     def __init__(self, spec: WorkerSpec, *,
                  hosts: Optional[Sequence[str]] = None,
                  listen: Optional[str] = None,
                  agents: Optional[int] = None,
-                 connect_timeout: float = 30.0):
+                 connect_timeout: float = 30.0,
+                 autoscale: bool = False,
+                 min_workers: Optional[int] = None):
         super().__init__()
         if not hosts and listen is None:
             raise ValueError("RemoteFleet needs agents to schedule on: pass "
@@ -141,7 +150,12 @@ class RemoteFleet(FleetBase):
         if agents is not None and listen is None:
             raise ValueError("agents=N counts dial-in joins and needs "
                              "listen='host:port'")
+        if min_workers is not None and not autoscale:
+            raise ValueError("min_workers is the autoscale floor; pass "
+                             "autoscale=True with it")
         self.spec = spec
+        self._autoscale = autoscale
+        self._scale_min = max(1, min_workers or 1)
         self._listener: Optional[socket.socket] = None
         self._min_agents = len(hosts or ())
         for addr in hosts or ():
@@ -199,7 +213,11 @@ class RemoteFleet(FleetBase):
         except framing.TransportError:
             # not a fleet agent (port scanner, wrong version): drop it,
             # keep listening — never take the fleet down
-            pass
+            return
+        if self._min_agents == 0:
+            # past initial assembly: this join is elastic capacity the
+            # listener invited mid-run, i.e. a scale-up
+            self.scale_ups += 1
 
     def _extra_waitables(self) -> List:
         return [self._listener] if self._listener is not None else []
@@ -226,7 +244,7 @@ class RemoteFleet(FleetBase):
         self._min_agents = 0
         return infos
 
-    def run(self, bundles, *, timeout: float = 600.0):
+    def _assemble(self, timeout: float) -> None:
         if self._min_agents:
             # initial assembly only: agents may still be dialing in, so
             # don't declare an empty pool dead before the join gate was
@@ -235,7 +253,6 @@ class RemoteFleet(FleetBase):
             # run — dispatches to it buffer in the socket, and the warm
             # agents keep draining meanwhile.
             self.warmup(timeout=min(timeout, 120.0))
-        return super().run(bundles, timeout=timeout)
 
 
 def run_remote_fleet(emulator: Emulator, profiles, *,
@@ -245,16 +262,23 @@ def run_remote_fleet(emulator: Emulator, profiles, *,
                      flops_scale: float = 1.0, storage_scale: float = 1.0,
                      mem_scale: float = 1.0, verify: bool = True,
                      timeout: float = 600.0,
-                     fleet: Optional[RemoteFleet] = None) -> FleetReport:
-    """Compile → detach → ship over TCP: one-call remote-fleet replay.
+                     fleet: Optional[RemoteFleet] = None,
+                     window: Optional[int] = None, autoscale: bool = False,
+                     min_workers: Optional[int] = None,
+                     collect: str = "reports") -> FleetReport:
+    """Compile → detach → ship over TCP, streamed: one-call remote replay.
 
-    Backs ``Emulator.emulate_many(executor="remote")``.  Pass ``fleet`` to
+    Backs ``Emulator.emulate_many(executor="remote")``.  ``profiles`` may
+    be any iterable — a lazy source is compiled as the scheduler pulls, at
+    most ``window`` bundles ahead of dispatch, so coordinator memory is
+    bounded by the window however long the stream runs.  Pass ``fleet`` to
     reuse a warm ``RemoteFleet`` (the caller keeps ownership); otherwise
     one is assembled from ``hosts``/``listen``/``agents`` and torn down
     around this run — tearing down tells the agents to exit, so one-shot
     runs don't leave orphaned worker pools on other machines.  With
     ``mesh_spec`` set, every agent's workers build their own device mesh
-    and collective legs execute on each host.
+    and collective legs execute on each host.  ``collect="totals"`` drops
+    per-profile reports and returns index-order-folded aggregates only.
     """
     own = fleet is None
     if own:
@@ -263,22 +287,34 @@ def run_remote_fleet(emulator: Emulator, profiles, *,
         # fleet's worth of trace/compile work first
         fleet = RemoteFleet(WorkerSpec(emulator=emulator.spec(),
                                        mesh=mesh_spec),
-                            hosts=hosts, listen=listen, agents=agents)
+                            hosts=hosts, listen=listen, agents=agents,
+                            autoscale=autoscale, min_workers=min_workers)
     t0 = time.perf_counter()
+    fold = ReportFold(keep_reports=collect != "totals")
+    n_samples = {"n": 0}                 # true profile samples compiled
+
+    def _bundles():
+        for p in profiles:
+            b = bundle_profile(emulator, p, mesh_spec=mesh_spec,
+                               flops_scale=flops_scale,
+                               storage_scale=storage_scale,
+                               mem_scale=mem_scale, verify=verify)
+            n_samples["n"] += b.n_profile_samples
+            yield b
+
     try:
-        bundles = [bundle_profile(emulator, p, mesh_spec=mesh_spec,
-                                  flops_scale=flops_scale,
-                                  storage_scale=storage_scale,
-                                  mem_scale=mem_scale, verify=verify)
-                   for p in profiles]
-        reports = fleet.run(bundles, timeout=timeout)
+        for idx, rep in fleet.stream(_bundles(), timeout=timeout,
+                                     window=window):
+            fold.add(idx, rep)
         stats = {"agents": fleet.n_agents, "workers": fleet.n_workers,
                  "worker_deaths": fleet.worker_deaths}
+        scaling = dict(fleet.last_scaling)
         workers = fleet.n_workers
     finally:
         if own:
             fleet.close()
     wall = time.perf_counter() - t0
-    return FleetReport(reports=reports, wall_s=wall,
-                       serial_s=sum(r.ttc_s for r in reports),
-                       max_workers=workers, cache_stats=stats)
+    return FleetReport(
+        reports=fold.reports, wall_s=wall, serial_s=fold.serial_s,
+        max_workers=workers, cache_stats=stats, totals=fold.totals,
+        n_samples=n_samples["n"], n_replayed=fold.n_done, scaling=scaling)

@@ -99,11 +99,18 @@ def _cmd_run(args) -> int:
 
 
 def _cmd_fleet(args) -> int:
+    from repro.fleet import FleetConfig
     from repro.scenarios import run_fleet
     mesh_spec = None
     if args.mesh:
         from repro.fleet import MeshSpec
         mesh_spec = MeshSpec(shape=(args.mesh,), axes=("model",))
+    config = FleetConfig(executor=args.executor, max_workers=args.workers,
+                         mesh_spec=mesh_spec, hosts=args.host or None,
+                         listen=args.listen, agents=args.agents,
+                         timeout=args.timeout, window=args.window,
+                         autoscale=args.autoscale is not None,
+                         min_workers=args.autoscale)
     jobs = [_parse_job(j) for j in args.job]
     store = _store(args.store)
     profiles = None
@@ -113,11 +120,8 @@ def _cmd_fleet(args) -> int:
         tags = _parse_params(args.from_store.split(",")) \
             if args.from_store else {}
         profiles = store.stream(tags)
-    out = run_fleet(jobs, profiles=profiles, store=store,
-                    max_workers=args.workers, executor=args.executor,
-                    mesh_spec=mesh_spec, fused=not args.per_sample,
-                    hosts=args.host or None, listen=args.listen,
-                    agents=args.agents, timeout=args.timeout)
+    out = run_fleet(jobs, profiles=profiles, store=store, config=config,
+                    fused=not args.per_sample)
     f = out.fleet
     if args.json:
         print(json.dumps({"fleet": f.summary(),
@@ -134,6 +138,9 @@ def _cmd_fleet(args) -> int:
                 if rep.n_collective_dispatches else "")
         print(f"  {r.name:20s} ttc={rep.ttc_s:.3f}s mode={rep.mode}"
               f" dispatches={rep.n_dispatches}{coll}")
+    if f.scaling:
+        print("  scaling:", ", ".join(f"{k}={v}"
+                                      for k, v in f.scaling.items()))
     extra = {k: v for k, v in f.cache_stats.items()}
     if extra:
         print("  stats:", ", ".join(f"{k}={v}" for k, v in extra.items()))
@@ -171,6 +178,14 @@ def main(argv: Optional[List[str]] = None) -> int:
     fl.add_argument("--per-sample", action="store_true",
                     help="force the legacy per-sample replay path "
                          "(thread executor only)")
+    fl.add_argument("--window", type=int, default=None, metavar="N",
+                    help="compile-ahead window: the coordinator holds at "
+                         "most N profiles/bundles pulled-but-unfinished, "
+                         "backpressuring the source (default: 2x workers)")
+    fl.add_argument("--autoscale", type=int, default=None, metavar="MIN",
+                    help="make the process/remote pool elastic: start at "
+                         "MIN workers, grow to --workers on queue depth, "
+                         "retire idle capacity when the stream drains")
     fl.add_argument("--timeout", type=float, default=600.0, metavar="S",
                     help="abort the fleet replay after S seconds "
                          "(default 600)")
@@ -200,6 +215,11 @@ def main(argv: Optional[List[str]] = None) -> int:
             ap.error(f"--per-sample is incompatible with --executor "
                      f"{args.executor}: process/remote fleets ship "
                      "compiled (fused) schedules")
+        if args.autoscale is not None and args.executor == "thread":
+            ap.error("--autoscale requires --executor process or remote "
+                     "(the thread pool is fixed-size)")
+        if args.autoscale is not None and args.autoscale < 1:
+            ap.error("--autoscale MIN must be >= 1")
         if (args.host or args.listen or args.agents is not None) \
                 and args.executor != "remote":
             ap.error("--host/--listen/--agents require --executor remote")

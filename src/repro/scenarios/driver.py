@@ -12,8 +12,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
-from repro.core.emulator import (VALID_EXECUTORS, EmulationReport, Emulator,
-                                 FleetReport)
+from repro.core.emulator import UNSET, EmulationReport, Emulator, FleetReport
 from repro.core.hardware import (HOST_I7_M620, HOST_STAMPEDE_NODE, TPU_V5E,
                                  HardwareSpec)
 from repro.core.metrics import SynapseProfile
@@ -68,6 +67,7 @@ class FleetResult:
     results: List[ScenarioResult]
     fleet: FleetReport
     predictions: Dict = field(default_factory=dict)  # predict_fleet() row
+    n_streamed: int = 0                  # profiles pulled from ``profiles``
 
 
 def run_fleet(jobs: Sequence[Tuple[str, Dict]] = (), *,
@@ -76,56 +76,73 @@ def run_fleet(jobs: Sequence[Tuple[str, Dict]] = (), *,
               hw: HardwareSpec = TPU_V5E,
               specs: Optional[Sequence[HardwareSpec]] = None,
               emulator: Optional[Emulator] = None,
-              max_workers: int = 4, fused: bool = True,
-              executor: str = "thread", mesh_spec=None,
-              hosts=None, listen=None, agents=None,
-              timeout: float = 600.0) -> FleetResult:
+              fused: bool = True, config=None, collect: str = "reports",
+              # legacy fleet kwargs — fold into FleetConfig + warning
+              max_workers=UNSET, executor=UNSET, mesh_spec=UNSET,
+              hosts=UNSET, listen=UNSET, agents=UNSET,
+              timeout=UNSET) -> FleetResult:
     """Synthesize and/or pull a fleet of profiles and replay it concurrently.
 
-    ``jobs`` is a sequence of (scenario_name, params) pairs.  Profiles are
-    generated and predicted up front (across ``specs``, forwarded to each
-    ``run_scenario`` call — defaulting to ``DEFAULT_SPECS``), then handed
-    to ``emulate_many`` so the shared plan cache dedups identical
-    (atom, amount) plans fleet-wide; generated profiles are stored only
-    after emulation so the persisted meta carries ``emulated_ttc_s``
-    exactly like single ``run_scenario`` calls.
+    ``jobs`` is a sequence of (scenario_name, params) pairs.  ``profiles``
+    feeds the fleet from pre-built profiles instead of (or in addition to)
+    generators — typically ``ProfileStore.stream(tags)``, the replay-a-
+    captured-day path.  The whole pipeline is *lazy end-to-end*: jobs are
+    generated/predicted and stored profiles pulled off disk only as the
+    fleet's compile-ahead window drains, so a production day streams
+    through the executor at bounded coordinator memory instead of being
+    drained into a job list first.  Streamed profiles reuse any
+    predictions persisted in their meta and are not re-stored (they
+    usually came from ``store``); generated profiles are stored only after
+    emulation so the persisted meta carries ``emulated_ttc_s`` exactly
+    like single ``run_scenario`` calls.
 
-    ``profiles`` feeds the fleet from pre-built profiles instead of (or in
-    addition to) generators — typically ``ProfileStore.stream(tags)``, the
-    replay-a-captured-day path.  Streamed profiles are drained lazily into
-    the job list, reuse any predictions persisted in their meta, and are
-    *not* re-stored (they usually came from ``store``).
-
-    ``executor`` selects the fleet backend (``repro.core.emulator.
-    VALID_EXECUTORS``): worker threads in this process, a
-    ``repro.fleet.ProcessFleet`` of local worker processes, or a
-    ``repro.fleet.RemoteFleet`` of host agents over TCP
-    (``hosts``/``listen``/``agents``, see ``emulate_many``).  With a
-    ``MeshSpec`` every process/remote worker builds its own mesh, so
-    scenarios with collective legs execute them.  ``timeout`` bounds the
-    replay (strict for process/remote; best-effort for threads).
+    ``config`` (a ``repro.fleet.FleetConfig``) selects and shapes the
+    fleet backend — thread pool, local ``ProcessFleet`` worker processes,
+    or a ``RemoteFleet`` of TCP host agents — including the compile-ahead
+    ``window`` and ``autoscale`` elasticity; the legacy
+    ``executor``/``max_workers``/``mesh_spec``/``hosts``/``listen``/
+    ``agents``/``timeout`` kwargs still work but fold into a FleetConfig
+    under a DeprecationWarning.  ``collect="totals"`` drops per-profile
+    results/reports and returns aggregates only (``FleetResult.results``
+    stays empty) — the bounded-memory mode for unbounded streams.
     """
-    if executor not in VALID_EXECUTORS:
-        # fail before paying generate/predict cost for the whole fleet
-        raise ValueError(
-            f"unknown executor {executor!r}; valid choices: "
-            + ", ".join(repr(e) for e in VALID_EXECUTORS))
-    results = [run_scenario(name, emulate=False, specs=specs, **params)
-               for name, params in jobs]
-    pulled = [ScenarioResult(name=p.tags.get("scenario", p.command),
-                             profile=p,
-                             predictions=p.meta.get("predictions", {}))
-              for p in (profiles or ())]
-    results = results + pulled
-    if not results:
+    from repro.fleet.config import FleetConfig
+    # fold (and config-validate) before paying generate/predict cost
+    cfg = FleetConfig.fold(
+        config,
+        dict(max_workers=max_workers, executor=executor, mesh_spec=mesh_spec,
+             hosts=hosts, listen=listen, agents=agents, timeout=timeout),
+        caller="run_fleet")
+    if not jobs and profiles is None:
         raise ValueError("run_fleet needs jobs and/or profiles to replay")
+    capture = collect == "reports"
+    results: List[ScenarioResult] = []   # grows as the fleet pulls
+    n_streamed = 0
+
+    def _source():
+        nonlocal n_streamed
+        for name, params in jobs:
+            r = run_scenario(name, emulate=False, specs=specs, **params)
+            if capture:
+                results.append(r)
+            yield r.profile
+        for p in (profiles or ()):
+            n_streamed += 1
+            if capture:
+                results.append(
+                    ScenarioResult(name=p.tags.get("scenario", p.command),
+                                   profile=p,
+                                   predictions=p.meta.get("predictions", {})))
+            yield p
+
     em = emulator or Emulator()
-    fleet = em.emulate_many([r.profile for r in results],
-                            max_workers=max_workers, fused=fused,
-                            executor=executor, mesh_spec=mesh_spec,
-                            hosts=hosts, listen=listen, agents=agents,
-                            timeout=timeout)
-    n_generated = len(results) - len(pulled)
+    fleet = em.emulate_many(_source(), fused=fused, config=cfg,
+                            collect=collect)
+    if fleet.n_profiles == 0:
+        raise ValueError("run_fleet needs jobs and/or profiles to replay "
+                         "(the profile stream was empty)")
+    # ReportFold emits reports in source order, so they zip with results
+    n_generated = len(jobs)
     for i, (r, rep) in enumerate(zip(results, fleet.reports)):
         r.report = rep
         r.profile.meta["emulated_ttc_s"] = rep.ttc_s
@@ -133,4 +150,6 @@ def run_fleet(jobs: Sequence[Tuple[str, Dict]] = (), *,
             r.run_id = store.add(r.profile)
     return FleetResult(results=results, fleet=fleet,
                        predictions=predict_fleet(
-                           [r.profile for r in results], hw))
+                           [r.profile for r in results], hw)
+                       if capture else {},
+                       n_streamed=n_streamed)

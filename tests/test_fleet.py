@@ -1,28 +1,39 @@
-"""Process-level fleet executor (ISSUE 3 contracts).
+"""Process-level fleet executor (ISSUE 3 + ISSUE 6 contracts).
 
 Fast tests pin the serialization layer in-process: detach/rehydrate and
 ``ScheduleBundle`` pickling are bit-identical round-trips, emulator/atom
 specs rebuild equivalent emulators, and ``keep_collectives`` controls
-whether wire-byte runs lower to executable barrier steps.
+whether wire-byte runs lower to executable barrier steps.  The streaming
+scheduler contracts (ISSUE 6) are pinned on an in-process loopback fleet
+(``_EchoFleet``): the compile-ahead window never exceeds ``window``
+pulled-but-unfinished bundles, autoscale up/down preserves bit-identical
+index-order-folded totals vs a fixed-size pool, and ``FleetConfig``
+round-trips pickle and folds legacy kwargs equivalently (with the
+deprecation warning).
 
 Process tests (marked ``slow`` + ``subproc`` — deselect with
 ``-m "not slow"`` while iterating) pin the executor: a process fleet
 reports consumed totals bit-identical to in-process fused replay for every
 profile, collective legs execute on per-worker meshes (nonzero collective
 dispatches — the first fleet mode where they do), worker death mid-run is
-survived with every bundle still reported, and a poison bundle fails the
-run instead of hanging it.
+survived with every bundle still reported, a poison bundle fails the run
+instead of hanging it, and a streamed autoscaled fleet's totals match a
+fixed-size fleet's bit-for-bit.
 """
+import multiprocessing as mp
 import os
 import pickle
 import signal
+import warnings
 
 import numpy as np
 import pytest
 
 from repro.core import (BarrierStep, Emulator, FusedSegment, ResourceVector,
                         Sample, SynapseProfile, rehydrate_schedule)
-from repro.fleet import (MeshSpec, ProcessFleet, ScheduleBundle, WorkerSpec,
+from repro.core.emulator import EmulationReport, ReportFold
+from repro.fleet import (FleetBase, FleetConfig, MeshSpec, Peer,
+                         ProcessFleet, ScheduleBundle, WorkerSpec,
                          bundle_profile)
 from repro.scenarios import generate
 
@@ -147,6 +158,183 @@ def test_process_executor_rejects_per_sample_path():
 
 
 # ---------------------------------------------------------------------------
+# streaming scheduler + FleetConfig (fast, in-process loopback peers)
+# ---------------------------------------------------------------------------
+
+class _EchoPeer(Peer):
+    """Loopback peer: ``dispatch`` writes the reply into its own pipe, so
+    the scheduler's wait/collect path runs unchanged with zero
+    subprocesses.  The 'replay' consumes exactly the bundle's planned
+    totals, so folded aggregates are deterministic."""
+
+    def __init__(self):
+        super().__init__()
+        self._r, self._w = mp.Pipe(duplex=False)
+        self.ready = True
+
+    @property
+    def waitable(self):
+        return self._r
+
+    def dispatch(self, epoch, idx, bundle):
+        self.tasks.add((epoch, idx))
+        rep = EmulationReport(command=bundle.command, ttc_s=1e-3,
+                              n_samples=bundle.n_profile_samples,
+                              consumed=bundle.planned, mode="fused")
+        self._w.send(("ok", epoch, idx, rep))
+
+    def recv(self):
+        return self._r.recv()
+
+    def close(self):
+        self._r.close()
+        self._w.close()
+
+
+class _EchoFleet(FleetBase):
+    def __init__(self, n, *, autoscale=False, scale_max=3, min_workers=1):
+        super().__init__()
+        self._autoscale = autoscale
+        self._scale_min = min_workers
+        self._scale_max = scale_max
+        for _ in range(n):
+            self._peers.append(_EchoPeer())
+
+    def _scale_up(self):
+        if len(self._peers) >= self._scale_max:
+            return False
+        self._peers.append(_EchoPeer())
+        self.scale_ups += 1
+        return True
+
+
+def _echo_bundle(i):
+    # awkward float amounts on purpose: summation order changes the bits,
+    # so identical fold totals really mean identical fold order
+    return ScheduleBundle(command=f"echo{i}", payload={},
+                          n_profile_samples=1,
+                          planned=_rv(flops=0.1 * i + 0.3, hbm=0.7 * i))
+
+
+def _fold_stream(fleet, bundles, **kw):
+    fold = ReportFold()
+    for idx, rep in fleet.stream(bundles, **kw):
+        fold.add(idx, rep)
+    return fold
+
+
+def test_stream_window_bounds_compile_ahead():
+    """The backpressure contract: a probe source counting outstanding
+    pulls (pulled but not yet yielded back) never sees more than
+    ``window`` in flight."""
+    n, window = 24, 4
+    state = {"pulled": 0, "done": 0, "peak": 0}
+
+    def source():
+        for i in range(n):
+            out = state["pulled"] - state["done"]
+            state["peak"] = max(state["peak"], out + 1)   # incl. this pull
+            state["pulled"] += 1
+            yield _echo_bundle(i)
+
+    with _EchoFleet(1) as fleet:
+        fold = ReportFold()
+        for idx, rep in fleet.stream(source(), window=window):
+            state["done"] += 1
+            fold.add(idx, rep)
+    assert fold.n_done == n
+    assert state["peak"] <= window
+    assert fleet.last_scaling["peak_window"] <= window
+    # reports folded in index order regardless of completion order
+    assert [r.command for r in fold.reports] == \
+        [f"echo{i}" for i in range(n)]
+
+
+def test_stream_autoscale_matches_fixed_totals_bitwise():
+    """Elasticity must not change the answer: an autoscaled 1→3 pool folds
+    the same aggregate bits as a fixed 3-worker pool, scales up on queue
+    depth, and parks back at its floor when the stream drains."""
+    bundles = [_echo_bundle(i) for i in range(30)]
+    with _EchoFleet(3) as fixed:
+        ref = _fold_stream(fixed, list(bundles))
+    with _EchoFleet(1, autoscale=True, scale_max=3) as elastic:
+        out = _fold_stream(elastic, iter(bundles), window=8)
+        assert elastic.scale_ups >= 1
+        assert elastic.scale_downs >= 1
+        assert len(elastic._peers) == 1              # parked at the floor
+    assert out.totals == ref.totals                  # bit-identical
+    assert out.serial_s == ref.serial_s
+    assert out.n_done == ref.n_done == 30
+    sc = elastic.last_scaling
+    assert sc["scale_ups"] == elastic.scale_ups
+    assert 1 <= sc["peak_workers"] <= 3
+    assert sc["peak_queue_depth"] >= 1
+
+
+def test_fleet_config_validates_and_pickles():
+    cfg = FleetConfig.process(max_workers=8, autoscale=True, min_workers=2,
+                              window=16, timeout=30.0)
+    assert pickle.loads(pickle.dumps(cfg)) == cfg
+    assert cfg.scale_min == 2
+    assert FleetConfig.remote(["h:1"]).hosts == ("h:1",)   # normalized
+    with pytest.raises(ValueError):
+        FleetConfig(executor="carrier-pigeon")
+    with pytest.raises(ValueError):                  # hosts without remote
+        FleetConfig(hosts=("h:1",))
+    with pytest.raises(ValueError, match="process"):  # mesh on threads
+        FleetConfig(mesh_spec=MeshSpec(shape=(2,), axes=("model",)))
+    with pytest.raises(ValueError):                  # remote with no agents
+        FleetConfig(executor="remote")
+    with pytest.raises(ValueError):                  # agents without listen
+        FleetConfig.remote(["h:1"], agents=2)
+    with pytest.raises(ValueError):                  # floor without autoscale
+        FleetConfig.process(min_workers=2)
+    with pytest.raises(ValueError):                  # floor above ceiling
+        FleetConfig.process(max_workers=2, autoscale=True, min_workers=3)
+    with pytest.raises(ValueError):
+        FleetConfig(window=0)
+    with pytest.raises(ValueError):                  # threads can't scale
+        FleetConfig(executor="thread", autoscale=True)
+
+
+def test_fleet_config_folds_legacy_kwargs_equivalently():
+    from repro.fleet.config import UNSET
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        folded = FleetConfig.fold(
+            None, dict(executor="process", max_workers=3, timeout=5.0),
+            caller="test")
+    assert folded == FleetConfig.process(max_workers=3, timeout=5.0)
+    with warnings.catch_warnings():                  # silence ≠ deprecation
+        warnings.simplefilter("error")
+        assert FleetConfig.fold(None, dict(executor=UNSET, hosts=UNSET),
+                                caller="test") == FleetConfig()
+    with pytest.raises(ValueError, match="both"):    # one surface at a time
+        FleetConfig.fold(FleetConfig(), dict(max_workers=2), caller="test")
+    with pytest.raises(TypeError):
+        FleetConfig.fold(None, dict(bogus=1), caller="test")
+
+
+def test_emulate_many_accepts_config_and_generator():
+    em = _em()
+    profs = [_profile([_rv(flops=FPI * (i + 1))], command=f"s{i}")
+             for i in range(6)]
+    with warnings.catch_warnings():                  # config= never warns
+        warnings.simplefilter("error")
+        ref = em.emulate_many(profs, config=FleetConfig.thread(max_workers=1))
+        streamed = em.emulate_many(
+            (p for p in profs),
+            config=FleetConfig.thread(max_workers=1, window=2),
+            collect="totals")
+    assert streamed.n_replayed == ref.n_replayed == 6
+    assert streamed.reports == []                    # totals mode drops them
+    assert streamed.totals == ref.totals             # bit-identical fold
+    assert streamed.n_samples == ref.n_samples == 6
+    assert ref.summary()["total_flops"] == ref.totals.flops
+    with pytest.raises(ValueError, match="collect"):
+        em.emulate_many(profs, collect="everything")
+
+
+# ---------------------------------------------------------------------------
 # process executor (spawns real workers)
 # ---------------------------------------------------------------------------
 
@@ -210,3 +398,27 @@ def test_process_fleet_survives_worker_death_and_reports_errors():
             [b.command for b in bundles[:2]]
         assert [r.consumed for r in again] == \
             [r.consumed for r in reports[:2]]
+
+
+@pytest.mark.slow
+@pytest.mark.subproc
+def test_process_fleet_streamed_autoscale_matches_fixed():
+    """The ISSUE 6 acceptance contract on real workers: a lazy profile
+    source replayed by an elastic 1→2 pool folds aggregate totals
+    bit-identical to a fixed 2-worker pool over the same profiles, with
+    the scale record surfaced in FleetReport.scaling."""
+    em = _em()
+    profs = [_mixed(i) for i in range(6)]
+    fixed = em.emulate_many(profs, config=FleetConfig.process(max_workers=2),
+                            collect="totals")
+    elastic = em.emulate_many(
+        (p for p in profs),                          # no len(): a stream
+        config=FleetConfig.process(max_workers=2, autoscale=True,
+                                   min_workers=1, window=4),
+        collect="totals")
+    assert elastic.totals == fixed.totals            # bit-identical
+    assert elastic.n_replayed == fixed.n_replayed == len(profs)
+    assert elastic.reports == [] == fixed.reports
+    assert elastic.scaling["scale_ups"] >= 1         # it really grew
+    assert 1 <= elastic.scaling["peak_workers"] <= 2
+    assert elastic.scaling["peak_window"] <= 4
