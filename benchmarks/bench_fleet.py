@@ -345,6 +345,86 @@ def soak(fast: bool = False):
     return rows
 
 
+# ---------------------------------------------------------------------------
+# chaos: recovery cost under a seeded fault schedule (ISSUE 7 acceptance)
+# ---------------------------------------------------------------------------
+
+def chaos(fast: bool = False):
+    """Replay the same exact-amount profile set twice on a 2-worker process
+    fleet — once clean, once under a seeded ``ChaosPolicy`` where every
+    worker dies exactly once, on its 5th dispatch — and report what the
+    faults cost: worker deaths, requeues, requeue latency, lost replay
+    work, MTTR (death → replacement ready), heartbeat volume, and the
+    wall-clock overhead of recovering.  The hard asserts are noise-free:
+    fault-injected totals must be bit-identical to the clean run AND equal
+    the analytic expectation, the scheduled deaths must actually happen,
+    and every death must be measured (MTTR recorded, requeues counted).
+    """
+    from repro.fleet import ChaosPolicy
+
+    n = 12 if fast else 24
+    samples_per = 4
+    em = Emulator(compute_tile=_SOAK_TILE, mem_block=_SOAK_BLOCK)
+    profiles = [_soak_profile(i, samples_per) for i in range(n)]
+
+    t0 = time.perf_counter()
+    clean = em.emulate_many(
+        profiles, config=FleetConfig.process(max_workers=WORKERS),
+        collect="totals")
+    clean_wall = time.perf_counter() - t0
+
+    pol = ChaosPolicy(seed=7, kill_every=5, max_faults=1)
+    # liveness 2s => 0.5s heartbeats: short enough that pings actually
+    # flow within this run's few seconds, three orders of magnitude above
+    # the ms-scale bundle replays so nothing is falsely reaped
+    cfg = FleetConfig.process(max_workers=WORKERS, chaos=pol,
+                              max_respawns=8, liveness_timeout=2.0)
+    t0 = time.perf_counter()
+    hurt = em.emulate_many(profiles, config=cfg, collect="totals")
+    chaos_wall = time.perf_counter() - t0
+    rec = hurt.recovery
+
+    exp_flops, exp_hbm = _expected_totals(n, samples_per)
+    rows = [{
+        "n_profiles": n,
+        "workers": WORKERS,
+        "kill_every": 5,
+        "clean_wall_s": clean_wall,
+        "chaos_wall_s": chaos_wall,
+        "recovery_overhead": chaos_wall / clean_wall if clean_wall else 0.0,
+        "worker_deaths": rec.get("worker_deaths", 0),
+        "requeued": rec.get("requeued", 0),
+        "requeue_latency_s": rec.get("requeue_latency_s", 0.0),
+        "lost_replay_s": rec.get("lost_replay_s", 0.0),
+        "mttr_s": rec.get("mttr_s"),
+        "heartbeats": rec.get("heartbeats", 0),
+        "respawns": hurt.cache_stats.get("respawns", 0),
+        "totals_bit_identical": hurt.totals == clean.totals,
+        "totals_exact": (hurt.totals.flops == exp_flops
+                         and hurt.totals.hbm_bytes == exp_hbm),
+    }]
+    _emit_fleet("chaos", rows)
+
+    assert hurt.n_replayed == clean.n_replayed == n
+    assert hurt.totals == clean.totals, \
+        "fault-injected totals must be bit-identical to the clean run"
+    assert hurt.totals.flops == exp_flops \
+        and hurt.totals.hbm_bytes == exp_hbm, \
+        "chaos totals drifted from the analytic expectation"
+    assert rec.get("worker_deaths", 0) >= 1, \
+        "the seeded kill schedule never fired — chaos is not reaching workers"
+    assert rec.get("requeued", 0) >= rec["worker_deaths"] or \
+        rec.get("requeued", 0) >= 1, \
+        "deaths happened but their in-flight bundles were not requeued"
+    assert rec.get("mttr_s") is not None and rec["mttr_s"] > 0.0, \
+        "worker deaths were repaired but MTTR was not measured"
+    assert rec.get("heartbeats", 0) >= 1, \
+        "liveness_timeout was armed but no heartbeat ever arrived"
+    assert rec.get("skipped") == [], "nothing should be skipped under raise"
+    return rows
+
+
 if __name__ == "__main__":
     main()
     soak()
+    chaos()

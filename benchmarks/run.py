@@ -31,9 +31,10 @@ def main() -> None:
         ("roofline", bench_roofline.main),
         ("scenarios", bench_scenarios.main),
         ("fleet", bench_fleet.main),
-        # substring --only matching: keep this name free of "fleet" so
-        # `--only fleet` doesn't drag the soak along
+        # substring --only matching: keep these names free of "fleet" so
+        # `--only fleet` doesn't drag the soak/chaos legs along
         ("soak", bench_fleet.soak),
+        ("chaos", bench_fleet.chaos),
     ]
     for name, fn in suite:
         if args.only and args.only not in name:

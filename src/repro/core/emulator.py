@@ -118,7 +118,11 @@ class FleetReport:
     compile-ahead window, not the stream length.  ``scaling`` carries the
     elasticity record of the run (scale_ups/scale_downs/peak_workers/
     peak_queue_depth/peak_window) when the executor streams through
-    ``FleetBase``."""
+    ``FleetBase``.  ``recovery`` carries the fault-recovery accounting of
+    the run (worker_deaths/hung_reaped/requeued/requeue_latency_s/
+    lost_replay_s/mttr_s/skipped/speculative_dispatches/speculative_wins/
+    heartbeats) — what every fault cost, not just that recovery happened.
+    """
     reports: List[EmulationReport]
     wall_s: float                        # concurrent fleet wall time
     serial_s: float                      # sum of per-profile TTCs
@@ -128,6 +132,7 @@ class FleetReport:
     n_samples: int = 0                   # profile samples replayed
     n_replayed: int = 0                  # profiles replayed (any collect=)
     scaling: Dict[str, int] = field(default_factory=dict)
+    recovery: Dict = field(default_factory=dict)
 
     @property
     def n_profiles(self) -> int:
@@ -154,6 +159,8 @@ class FleetReport:
             out["total_ici_bytes"] = self.totals.ici_total
         if self.scaling:
             out["scaling"] = dict(self.scaling)
+        if self.recovery:
+            out["recovery"] = dict(self.recovery)
         return out
 
 
@@ -181,12 +188,32 @@ class ReportFold:
         self.totals = ResourceVector()
         self.serial_s = 0.0
         self.n_done = 0
+        self.n_skipped = 0
         self._next = 0
         self._pending: Dict[int, EmulationReport] = {}
+        self._holes: set = set()
 
     def add(self, idx: int, report: EmulationReport) -> None:
         self._pending[idx] = report
-        while self._next in self._pending:
+        self._drain()
+
+    def skip(self, idx: int) -> None:
+        """Index ``idx`` will never arrive (degraded-mode skip): fold past
+        the hole so later indices still aggregate in order — without this
+        one skipped bundle would stall the fold and buffer the rest of the
+        stream."""
+        self.n_skipped += 1
+        self._holes.add(idx)
+        self._drain()
+
+    def _drain(self) -> None:
+        while True:
+            if self._next in self._holes:
+                self._holes.discard(self._next)
+                self._next += 1
+                continue
+            if self._next not in self._pending:
+                break
             rep = self._pending.pop(self._next)
             self._next += 1
             self.totals = self.totals.add(rep.consumed)
@@ -555,6 +582,14 @@ class Emulator:
         profiles already replaying run to completion — threads can't be
         preempted.
 
+        The robustness knobs (``max_attempts``, ``liveness_timeout``,
+        ``speculate``, ``on_failure``, ``chaos``, ``max_respawns``) thread
+        straight through to the fleet scheduler; fault accounting comes
+        back in ``FleetReport.recovery``.  With ``on_failure="skip"`` the
+        run completes degraded instead of raising on a poison profile —
+        ``totals`` then cover only the replayed profiles, with the holes
+        listed in ``recovery["skipped"]``.
+
         Each profile replays on exactly one worker, so the per-profile
         sample-ordering contract is intact; ordering *across* profiles is
         deliberately unconstrained (a fleet has no inter-profile
@@ -590,6 +625,11 @@ class Emulator:
                                         window=cfg.window,
                                         autoscale=cfg.autoscale,
                                         min_workers=cfg.min_workers,
+                                        max_attempts=cfg.max_attempts,
+                                        liveness_timeout=cfg.liveness_timeout,
+                                        speculate=cfg.speculate,
+                                        on_failure=cfg.on_failure,
+                                        chaos=cfg.chaos,
                                         collect=collect)
             from repro.fleet.executor import run_process_fleet
             return run_process_fleet(self, profiles,
@@ -601,6 +641,12 @@ class Emulator:
                                      timeout=cfg.timeout, window=cfg.window,
                                      autoscale=cfg.autoscale,
                                      min_workers=cfg.min_workers,
+                                     max_attempts=cfg.max_attempts,
+                                     liveness_timeout=cfg.liveness_timeout,
+                                     speculate=cfg.speculate,
+                                     on_failure=cfg.on_failure,
+                                     chaos=cfg.chaos,
+                                     max_respawns=cfg.max_respawns,
                                      collect=collect)
         workers = cfg.max_workers
         if hasattr(profiles, "__len__"):
@@ -620,6 +666,7 @@ class Emulator:
                 self.set_plan_cache(cache)
             before = cache.stats()
             fold = ReportFold(keep_reports=collect != "totals")
+            skipped: List[int] = []
             try:
                 t0 = time.perf_counter()
                 deadline = time.monotonic() + cfg.timeout
@@ -662,7 +709,20 @@ class Emulator:
                                     "unfinished (in-flight thread replays "
                                     "drain before this raises)")
                             for f in done:
-                                fold.add(inflight.pop(f), f.result())
+                                idx = inflight.pop(f)
+                                try:
+                                    rep = f.result()
+                                except Exception:
+                                    # threads share this process, so there
+                                    # is no worker to reap or retry against:
+                                    # a profile that raises is degraded-mode
+                                    # skippable, nothing else
+                                    if cfg.on_failure != "skip":
+                                        raise
+                                    skipped.append(idx)
+                                    fold.skip(idx)
+                                    continue
+                                fold.add(idx, rep)
                     except BaseException:
                         for f in inflight:
                             f.cancel()           # queued ones never start
@@ -677,10 +737,12 @@ class Emulator:
             after = cache.stats()
             stats = {k: after[k] - before[k] for k in ("plans_built", "hits")}
             stats["size"] = after["size"]
+        recovery = {"skipped": sorted(skipped)} if skipped else {}
         return FleetReport(reports=fold.reports, wall_s=wall,
                            serial_s=fold.serial_s, max_workers=workers,
                            cache_stats=stats, totals=fold.totals,
-                           n_samples=n_samples, n_replayed=fold.n_done)
+                           n_samples=n_samples, n_replayed=fold.n_done,
+                           recovery=recovery)
 
 
 def _collapse(samples: List[Sample]):

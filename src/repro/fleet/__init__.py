@@ -62,6 +62,23 @@ Thread vs process vs remote executor — decision matrix:
                                             min_workers floor     down to the floor
                                             when the stream       when the stream
                                             drains                drains
+  hung-peer           no (a wedged thread   YES: liveness_        YES: agents heartbeat
+  detection?          holds its bundle      timeout arms worker   over TCP; a silent
+                      until the run         heartbeats; a silent  agent is destroyed
+                      timeout)              worker is destroyed   and its bundles
+                                            and its bundles       requeue onto live
+                                            requeued              hosts
+  fault injection?    no (nothing to kill   YES: a seeded         YES: the same policy
+                      without taking the    ChaosPolicy kills/    plus agent-side drop/
+                      fleet down)           hangs/delays workers  corrupt-frame faults;
+                                            deterministically,    same seed, same fault
+                                            replayable run to     schedule across
+                                            run                   transports
+  degraded            YES: on_failure=      YES: poison bundles   YES: same scheduler,
+  completion?         "skip" drops a        skipped, holes +      same skip accounting
+                      raising profile,      per-fault recovery    over TCP
+                      keeps the rest        cost in FleetReport
+                                            .recovery
   best for            small fleets, tiny    large fleets,         fleets bigger than one
                       profiles, tests       collective legs,      machine; real TPU
                                             saturating a host     hosts joining later
@@ -94,8 +111,10 @@ DeprecationWarning.  Migrating is mechanical::
 """
 from repro.fleet.bundle import (MeshSpec, ScheduleBundle,  # noqa: F401
                                 WorkerSpec, bundle_profile)
+from repro.fleet.chaos import ChaosPolicy  # noqa: F401
 from repro.fleet.config import (UNSET, FleetConfig)  # noqa: F401
-from repro.fleet.executor import (FleetBase, Peer, PeerGone,  # noqa: F401
+from repro.fleet.executor import (CrashLoopError,  # noqa: F401
+                                  FleetBase, Peer, PeerGone,
                                   ProcessFleet, run_process_fleet)
 from repro.fleet.transport.remote import (RemoteFleet,  # noqa: F401
                                           run_remote_fleet)

@@ -23,6 +23,18 @@ every queued bundle and exits; the coordinator reaps the closed
 connection like a dead process worker.  The agent exits when the
 coordinator says ``stop`` or its connection drops — it never outlives
 the fleet it joined.
+
+When the shipped ``WorkerSpec`` sets ``heartbeat_s``, the agent sends
+``("ping",)`` frames from a daemon thread at that cadence — the
+coordinator's liveness watermark.  (A *hung local worker* behind a live,
+heartbeating agent is invisible to coordinator liveness; the agent's
+ProcessFleet recovery is what covers that case.)  When the spec carries
+a ``ChaosPolicy``, the agent derives the deterministic ``"agent"``-scope
+actor and consults it per proxied result: it may mangle the Nth reply
+frame (``corrupt_frame_nth`` — the coordinator reaps the corrupt stream)
+or vanish instead of replying (``drop_agent_after``).  Its local workers
+derive their own ``worker:<n>`` actors from the same policy, so a remote
+fleet replays the same per-worker fault ordinals a process fleet would.
 """
 from __future__ import annotations
 
@@ -30,6 +42,7 @@ import argparse
 import os
 import socket
 import sys
+import threading
 import traceback
 from collections import deque
 from multiprocessing import connection as mp_conn
@@ -43,6 +56,10 @@ def log(msg: str) -> None:
     print(f"[fleet-agent pid={os.getpid()}] {msg}", flush=True)
 
 
+class _ChaosDrop(Exception):
+    """Injected agent loss: close the coordinator connection abruptly."""
+
+
 def serve(sock: socket.socket, n_workers: int) -> int:
     """Run the agent protocol on an established coordinator connection."""
     sock.settimeout(_IO_TIMEOUT)
@@ -54,18 +71,51 @@ def serve(sock: socket.socket, n_workers: int) -> int:
     spec = msg[1]
     from repro.fleet.executor import PeerGone, ProcessFleet
 
+    chaos = getattr(spec, "chaos", None)
+    actor = chaos.actor("agent") if chaos is not None else None
+    send_lock = threading.Lock()   # heartbeat thread vs serve loop: one
+    hb_stop = threading.Event()    # frame on the wire at a time
+
+    def send(msg, *, _mangle=None) -> None:
+        with send_lock:
+            framing.send_frame(sock, msg, _mangle=_mangle)
+
+    def send_result(msg) -> None:
+        """ok/err results pass through the chaos actor on their way out."""
+        if actor is not None:
+            act = actor.on_reply()
+            if act == "drop":
+                log(f"chaos: dropping connection instead of result "
+                    f"#{actor.replies}")
+                raise _ChaosDrop()
+            if act == "corrupt":
+                log(f"chaos: corrupting result frame #{actor.replies}")
+                send(msg, _mangle=chaos.corrupt_bytes)
+                return
+        send(msg)
+
     log(f"spawning {n_workers} local worker(s)"
         + (f" with mesh {list(spec.mesh.shape)}" if spec.mesh else ""))
     try:
         fleet = ProcessFleet(n_workers, spec)
         infos = fleet.warmup()
     except BaseException:
-        framing.send_frame(sock, ("err", None, None, traceback.format_exc()))
+        send(("err", None, None, traceback.format_exc()))
         raise
-    framing.send_frame(sock, ("ready", {
+    send(("ready", {
         "workers": len(fleet.pids), "host": socket.gethostname(),
         "agent_pid": os.getpid(), "worker_infos": infos}))
     log(f"ready: {len(fleet.pids)} worker(s) warm, serving")
+    heartbeat_s = getattr(spec, "heartbeat_s", 0.0) or 0.0
+    if heartbeat_s > 0:
+        def _beat():
+            while not hb_stop.wait(heartbeat_s):
+                try:
+                    send(("ping",))
+                except (framing.TransportError, OSError):
+                    return
+        threading.Thread(target=_beat, daemon=True,
+                         name="agent-heartbeat").start()
 
     pending = deque()          # (epoch, idx, bundle) awaiting a free worker
     stopping = False
@@ -79,19 +129,18 @@ def serve(sock: socket.socket, n_workers: int) -> int:
         respawn budget is spent the pool shrank for good, and the
         coordinator must stop filling slots this host no longer has."""
         for e, idx in list(peer.tasks):
-            framing.send_frame(sock, ("retry", e, idx,
-                                      "agent-local worker died"))
+            send(("retry", e, idx, "agent-local worker died"))
         peer.tasks.clear()
         fleet._reap(peer, deque())
-        if fleet._peers:
-            framing.send_frame(sock, ("ready",
-                                      {"workers": len(fleet._peers)}))
+        if fleet._peers or fleet._pending_refill():
+            send(("ready", {"workers": max(1, len(fleet._peers))}))
 
     try:
         while True:
             in_flight = any(p.tasks for p in fleet._peers)
             if stopping and not in_flight and not pending:
                 break
+            fleet._tick(deque())   # service due backoff respawns
             # -- collect: coordinator frames + local worker replies -------
             waitables = ([] if stopping else [sock]) + \
                 [p.waitable for p in fleet._peers]
@@ -117,14 +166,16 @@ def serve(sock: socket.socket, n_workers: int) -> int:
                     _, e, idx, rep = reply
                     peer.tasks.discard((e, idx))
                     served += 1
-                    framing.send_frame(sock, ("ok", e, idx, rep))
+                    send_result(("ok", e, idx, rep))
                 elif kind == "err":
                     _, e, idx, tb = reply
                     if idx is None:            # replacement failed init
                         reap_local(peer)
                     else:
                         peer.tasks.discard((e, idx))
-                        framing.send_frame(sock, ("err", e, idx, tb))
+                        send_result(("err", e, idx, tb))
+                # "ping" from a local worker: nothing to proxy — the
+                # agent's own heartbeat is the coordinator-facing signal
             # -- dispatch queued bundles to free local slots --------------
             for peer in list(fleet._peers):
                 while pending and peer.free_slots > 0:
@@ -138,17 +189,25 @@ def serve(sock: socket.socket, n_workers: int) -> int:
                         pending.appendleft((epoch, idx, bundle))
                         reap_local(peer)
                         break
-            if not fleet._peers:
+            if not fleet._peers and not fleet._pending_refill():
                 for epoch, idx, _ in pending:
-                    framing.send_frame(sock, ("retry", epoch, idx,
-                                              "agent has no live workers"))
+                    send(("retry", epoch, idx,
+                          "agent has no live workers"))
                 pending.clear()
                 log("no live workers left and respawn budget spent — "
                     "leaving the fleet")
                 return 1
     except framing.TransportClosed:
         log("coordinator connection closed — shutting down")
+    except _ChaosDrop:
+        try:
+            sock.close()
+        except OSError:
+            pass
+        log("chaos: agent dropped out of the fleet")
+        return 3
     finally:
+        hb_stop.set()
         fleet.close()
     log(f"served {served} bundle(s), exiting")
     return 0

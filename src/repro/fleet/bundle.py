@@ -21,6 +21,7 @@ from typing import Dict, Optional, Tuple
 from repro.core.emulator import Emulator, EmulatorSpec
 from repro.core.metrics import ResourceVector, SynapseProfile
 from repro.core.schedule import CompiledSchedule, rehydrate_schedule
+from repro.fleet.chaos import ChaosPolicy
 
 
 @dataclass(frozen=True)
@@ -51,11 +52,17 @@ class MeshSpec:
 @dataclass(frozen=True)
 class WorkerSpec:
     """Per-worker configuration shipped once at spawn: how to build the
-    worker's emulator (and mesh), and whether to pre-trace the common fused
-    programs before accepting bundles."""
+    worker's emulator (and mesh), whether to pre-trace the common fused
+    programs before accepting bundles, how often to heartbeat the
+    coordinator (``heartbeat_s > 0`` starts a ``("ping",)`` sender thread
+    in every worker and agent — the liveness watermark's signal), and an
+    optional seeded ``ChaosPolicy`` whose faults every worker/agent
+    spawned from this spec injects deterministically."""
     emulator: EmulatorSpec
     mesh: Optional[MeshSpec] = None
     warmup: bool = True
+    heartbeat_s: float = 0.0
+    chaos: Optional[ChaosPolicy] = None
 
 
 @dataclass

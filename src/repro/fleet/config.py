@@ -39,6 +39,7 @@ from typing import Dict, Optional, Sequence, Tuple
 
 from repro.core.emulator import UNSET, VALID_EXECUTORS, _Unset
 from repro.fleet.bundle import MeshSpec
+from repro.fleet.chaos import ChaosPolicy
 
 #: legacy kwarg names the surfaces fold into a FleetConfig
 LEGACY_FLEET_KWARGS = ("executor", "max_workers", "mesh_spec", "hosts",
@@ -60,6 +61,19 @@ class FleetConfig:
     queued bundles outnumber free slots and retires idle workers (or
     releases idle remote agents) once the stream drains.  Scale events and
     high-water marks surface in ``FleetReport.scaling``.
+
+    The robustness knobs shape how the scheduler survives faults:
+    ``max_attempts`` is the per-bundle dispatch budget before a bundle is
+    declared poison; ``liveness_timeout`` arms heartbeat-based hung-peer
+    detection (process/remote only — a peer silent that long is destroyed
+    and its work requeued); ``speculate`` re-dispatches a straggling
+    bundle once its age exceeds ``speculate × median`` completion time
+    (first result wins); ``on_failure`` picks between failing the run on
+    a poison bundle (``"raise"``) and completing degraded (``"skip"``,
+    holes listed in ``FleetReport.recovery["skipped"]``); ``chaos``
+    injects a seeded, reproducible fault schedule (process/remote only);
+    ``max_respawns`` caps worker respawns (process only).  Fault accounting
+    lands in ``FleetReport.recovery``.
     """
 
     executor: str = "thread"
@@ -72,6 +86,12 @@ class FleetConfig:
     listen: Optional[str] = None
     agents: Optional[int] = None
     timeout: float = 600.0
+    max_attempts: int = 3                    # per-bundle dispatch budget
+    liveness_timeout: Optional[float] = None  # hung-peer reap threshold
+    on_failure: str = "raise"                # or "skip": complete degraded
+    speculate: Optional[float] = None        # straggler re-dispatch factor
+    chaos: Optional[ChaosPolicy] = None      # seeded fault injection
+    max_respawns: Optional[int] = None       # process-pool respawn budget
 
     def __post_init__(self):
         if self.executor not in VALID_EXECUTORS:
@@ -120,6 +140,37 @@ class FleetConfig:
                 raise ValueError(
                     f"min_workers={self.min_workers} must satisfy "
                     f"1 <= min_workers <= max_workers={self.max_workers}")
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1 (it is the "
+                             "per-bundle dispatch budget)")
+        if self.on_failure not in ("raise", "skip"):
+            raise ValueError(f"on_failure must be 'raise' or 'skip', got "
+                             f"{self.on_failure!r}")
+        if self.liveness_timeout is not None and self.liveness_timeout <= 0:
+            raise ValueError("liveness_timeout must be > 0 seconds")
+        if self.speculate is not None and self.speculate < 1.0:
+            raise ValueError("speculate must be >= 1.0 (it multiplies the "
+                             "median bundle completion time)")
+        if self.executor == "thread":
+            for knob, val in (("liveness_timeout", self.liveness_timeout),
+                              ("speculate", self.speculate),
+                              ("chaos", self.chaos)):
+                if val is not None:
+                    raise ValueError(
+                        f"{knob} requires executor='process' or 'remote': "
+                        "thread workers share one process, so there is no "
+                        "peer to heartbeat, kill, or re-dispatch against")
+        if self.max_respawns is not None:
+            if self.executor != "process":
+                raise ValueError("max_respawns caps the local process "
+                                 "pool's respawn budget; remote agents own "
+                                 "their own (executor='process' only)")
+            if self.max_respawns < 0:
+                raise ValueError("max_respawns must be >= 0")
+        if self.chaos is not None and not isinstance(self.chaos,
+                                                     ChaosPolicy):
+            raise TypeError(f"chaos must be a ChaosPolicy, got "
+                            f"{type(self.chaos).__name__}")
 
     @property
     def scale_min(self) -> int:
@@ -130,23 +181,35 @@ class FleetConfig:
 
     @classmethod
     def thread(cls, max_workers: int = 4, *, window: Optional[int] = None,
+               max_attempts: int = 3, on_failure: str = "raise",
                timeout: float = 600.0) -> "FleetConfig":
         """In-process thread pool: shared plan cache, no meshes, no
         elasticity — but the profile source is still pulled lazily with a
         ``window``-bounded submission queue."""
         return cls(executor="thread", max_workers=max_workers,
-                   window=window, timeout=timeout)
+                   window=window, max_attempts=max_attempts,
+                   on_failure=on_failure, timeout=timeout)
 
     @classmethod
     def process(cls, max_workers: int = 4, *,
                 min_workers: Optional[int] = None, autoscale: bool = False,
                 mesh: Optional[MeshSpec] = None,
                 window: Optional[int] = None,
+                max_attempts: int = 3,
+                liveness_timeout: Optional[float] = None,
+                on_failure: str = "raise",
+                speculate: Optional[float] = None,
+                chaos: Optional[ChaosPolicy] = None,
+                max_respawns: Optional[int] = None,
                 timeout: float = 600.0) -> "FleetConfig":
         """Spawn-based local worker pool (``repro.fleet.ProcessFleet``)."""
         return cls(executor="process", max_workers=max_workers,
                    min_workers=min_workers, autoscale=autoscale,
-                   mesh_spec=mesh, window=window, timeout=timeout)
+                   mesh_spec=mesh, window=window,
+                   max_attempts=max_attempts,
+                   liveness_timeout=liveness_timeout, on_failure=on_failure,
+                   speculate=speculate, chaos=chaos,
+                   max_respawns=max_respawns, timeout=timeout)
 
     @classmethod
     def remote(cls, hosts: Optional[Sequence[str]] = None, *,
@@ -154,6 +217,11 @@ class FleetConfig:
                mesh: Optional[MeshSpec] = None, autoscale: bool = False,
                min_workers: Optional[int] = None,
                window: Optional[int] = None,
+               max_attempts: int = 3,
+               liveness_timeout: Optional[float] = None,
+               on_failure: str = "raise",
+               speculate: Optional[float] = None,
+               chaos: Optional[ChaosPolicy] = None,
                timeout: float = 600.0) -> "FleetConfig":
         """TCP host agents (``repro.fleet.RemoteFleet``): dial ``hosts``
         and/or ``listen`` for dial-in agents.  With ``autoscale`` the open
@@ -162,7 +230,10 @@ class FleetConfig:
         return cls(executor="remote",
                    hosts=tuple(hosts) if hosts else None, listen=listen,
                    agents=agents, mesh_spec=mesh, autoscale=autoscale,
-                   min_workers=min_workers, window=window, timeout=timeout)
+                   min_workers=min_workers, window=window,
+                   max_attempts=max_attempts,
+                   liveness_timeout=liveness_timeout, on_failure=on_failure,
+                   speculate=speculate, chaos=chaos, timeout=timeout)
 
     # -- legacy folding ------------------------------------------------------
 

@@ -41,20 +41,41 @@ Scheduling is work-stealing-simple: one in-flight bundle per worker slot,
 next bundle to the first slot that frees up, so a straggler profile never
 blocks the rest of the fleet.  Only when no peer is left alive (and none
 can be refilled) with work still pending does a run raise.
+
+Liveness is layered on top of I/O-error detection: workers and agents
+whose spec sets ``heartbeat_s`` send periodic ``("ping",)`` frames, every
+received message refreshes the peer's ``last_seen`` watermark, and a peer
+that has in-flight work but has been silent past ``liveness_timeout`` is
+reaped as *hung* — its bundles requeue exactly like a dead peer's,
+instead of stalling the run to the global deadline.  ``speculate=p``
+adds per-bundle soft timeouts: once the pending queue is empty, a bundle
+in flight past ``p × median`` completion time is re-dispatched to a free
+slot and the first result wins (the epoch/attempt machinery already
+discards the loser).  Respawn after a death backs off exponentially
+(jittered by a seeded, chaos-safe RNG) and a spec that keeps dying trips
+``CrashLoopError`` instead of silently burning the respawn budget.
+``on_failure="skip"`` turns worker-reported bundle failures and
+exhausted attempt budgets into *skipped indices* rather than a raised
+stream; either way ``last_recovery`` records what every fault cost
+(requeue latency, lost replay work, MTTR, skips, speculation, heartbeat
+volume) and surfaces as ``FleetReport.recovery``.
 """
 from __future__ import annotations
 
 import multiprocessing as mp
 import os
+import statistics
 import time
 from collections import deque
 from multiprocessing import connection as mp_conn
+from random import Random
 from typing import (Deque, Dict, Iterable, Iterator, List, Optional, Set,
                     Tuple)
 
 from repro.core.emulator import (EmulationReport, Emulator, FleetReport,
                                  ReportFold)
 from repro.fleet.bundle import ScheduleBundle, WorkerSpec, bundle_profile
+from repro.fleet.chaos import ChaosPolicy
 from repro.fleet.worker import worker_loop
 
 _MAX_ATTEMPTS = 3          # dispatches per bundle before declaring it poison
@@ -63,6 +84,12 @@ _MAX_ATTEMPTS = 3          # dispatches per bundle before declaring it poison
 class PeerGone(Exception):
     """The peer (worker process or remote agent) is dead or unreachable:
     reap it, requeue its in-flight bundles, keep draining on survivors."""
+
+
+class CrashLoopError(RuntimeError):
+    """A peer spec is dying repeatedly within the crash-loop window: the
+    spec (not the luck) is the problem — stop respawning and say so
+    loudly instead of exhausting ``max_respawns`` in silence."""
 
 
 class Peer:
@@ -83,6 +110,12 @@ class Peer:
                                       bundle (its dispatch attempt stays
                                       counted, so poison budgets hold)
       ("err",   epoch, idx, tb)       bundle failed (idx=None: init died)
+      ("ping",)                       heartbeat: refreshes ``last_seen``
+
+    ``last_seen`` is the liveness watermark: the scheduler stamps it on
+    every received message (heartbeats included) and on every dispatch
+    (handing a peer work restarts its window), and a busy-but-silent
+    peer past ``liveness_timeout`` is reaped as hung.
     """
 
     capacity = 1
@@ -90,6 +123,7 @@ class Peer:
     def __init__(self):
         self.tasks: Set[Tuple[int, int]] = set()
         self.ready = False
+        self.last_seen = time.monotonic()
 
     @property
     def free_slots(self) -> int:
@@ -124,6 +158,11 @@ class Peer:
     def close(self) -> None:
         """Tear down the endpoint; never raises."""
 
+    def destroy(self) -> None:
+        """Tear down a peer known to be *hung*: no grace a wedged
+        endpoint will never honor.  Default: same as ``close``."""
+        self.close()
+
     def describe(self) -> str:
         return "fleet peer"
 
@@ -147,6 +186,7 @@ class FleetBase:
         self._closed = False
         self._epoch = 0
         self.worker_deaths = 0
+        self.hung_reaped = 0
         self.scale_ups = 0
         self.scale_downs = 0
         #: elasticity policy; subclasses flip these (ProcessFleet ctor,
@@ -155,25 +195,51 @@ class FleetBase:
         self._scale_min = 1
         #: high-water marks / event counts of the most recent stream
         self.last_scaling: Dict[str, int] = {}
+        #: fault-recovery accounting of the most recent stream
+        self.last_recovery: Dict = {}
+        #: MTTR bookkeeping: death times of faults a refill will repair,
+        #: popped when the replacement reports ready (approximate when a
+        #: scale-up races an outstanding respawn, exact otherwise)
+        self._fault_opened: Deque[float] = deque()
+        self._mttr_samples: List[float] = []
 
     # -- pool plumbing ------------------------------------------------------
 
     def _reap(self, peer: Peer, pending: Deque[int],
-              epoch: Optional[int] = None) -> None:
+              epoch: Optional[int] = None, *, hung: bool = False) -> None:
         """A peer died: requeue its in-flight bundles (only those belonging
         to the current run — stragglers from a raised run are dropped),
-        then refill the pool."""
+        then refill the pool.  ``hung`` peers get no teardown grace."""
         self.worker_deaths += 1
         for e, idx in peer.tasks:
             if epoch is not None and e == epoch:
                 pending.appendleft(idx)
         peer.tasks.clear()
-        peer.close()
+        if hung:
+            peer.destroy()
+        else:
+            peer.close()
         self._peers.remove(peer)
         self._refill(pending)
 
     def _refill(self, pending: Deque[int]) -> None:
         """Hook: replace a reaped peer if the transport can."""
+
+    def _tick(self, pending: Deque[int]) -> None:
+        """Hook: service deferred pool work each scheduler pass (the
+        backoff respawn queue, for transports that have one)."""
+
+    def _pending_refill(self) -> bool:
+        """Hook: is a deferred replacement (backoff respawn) still due?
+        While True, an empty pool is *recovering*, not dead."""
+        return False
+
+    def _note_ready(self) -> None:
+        """A peer reported ready: close the oldest open fault's MTTR
+        window, if a refill was outstanding."""
+        if self._fault_opened:
+            self._mttr_samples.append(
+                time.monotonic() - self._fault_opened.popleft())
 
     def _scale_up(self) -> bool:
         """Hook: add one peer of capacity (autoscale).  Returns True if the
@@ -223,11 +289,15 @@ class FleetBase:
         ``benchmarks/bench_fleet.py`` does exactly that."""
         deadline = time.monotonic() + timeout
         infos: List[Dict] = []
-        while self._warming():
+        while self._warming() or (not self._peers and self._pending_refill()):
             if time.monotonic() > deadline:
                 raise TimeoutError("fleet workers did not become ready "
                                    f"within {timeout}s")
-            for obj in self._wait(0.5, ready_only=True):
+            self._tick(deque())
+            evs = self._wait(0.5, ready_only=True)
+            if not evs and not self._peers:
+                time.sleep(0.05)      # backoff respawn still pending
+            for obj in evs:
                 peer = self._peer_for(obj)
                 if peer is None:
                     self._handle_extra(obj)
@@ -237,12 +307,15 @@ class FleetBase:
                 except PeerGone:
                     self._reap(peer, deque())
                     continue
+                peer.last_seen = time.monotonic()
                 if msg[0] == "ready":
                     peer.ready = True
+                    self._note_ready()
                     infos.append(msg[1])
                 elif msg[0] == "err":
                     raise RuntimeError(
                         f"fleet worker failed to initialize:\n{msg[-1]}")
+                # "ping": watermark refreshed above, nothing else to do
         if not self._peers:
             raise RuntimeError("no fleet worker survived initialization")
         return infos
@@ -250,7 +323,11 @@ class FleetBase:
     # -- execution ----------------------------------------------------------
 
     def stream(self, bundles: Iterable[ScheduleBundle], *,
-               timeout: float = 600.0, window: Optional[int] = None
+               timeout: float = 600.0, window: Optional[int] = None,
+               max_attempts: Optional[int] = None,
+               liveness_timeout: Optional[float] = None,
+               speculate: Optional[float] = None,
+               on_failure: str = "raise"
                ) -> Iterator[Tuple[int, EmulationReport]]:
         """Replay a (possibly lazy) bundle source; yields ``(idx, report)``
         pairs in completion order.
@@ -264,16 +341,48 @@ class FleetBase:
         scales), keeping every slot fed while leaving queue depth visible
         to the autoscaler.
 
-        Raises RuntimeError on a peer-reported replay failure, on a
-        poison bundle (one that outlived the per-bundle dispatch-attempt
-        budget across dying workers), or when the whole pool is dead with
-        work still pending; TimeoutError past the deadline.  Completed
-        bundles are dropped as their reports are yielded — a raised
-        stream's stragglers are recognized by their stale epoch in later
-        runs, exactly like ``run``'s.
+        Hardening knobs:
+
+        * ``max_attempts`` — per-bundle dispatch budget before the bundle
+          is declared poison (default ``_MAX_ATTEMPTS`` = 3).
+        * ``liveness_timeout`` — a *ready* peer holding in-flight work
+          that has been silent this long is reaped as hung (requeue, no
+          teardown grace).  Pair with a heartbeating spec: without
+          heartbeats a worker legitimately busy on a long bundle is
+          indistinguishable from a wedged one.
+        * ``speculate=p`` — once the pending queue is empty, a bundle in
+          flight past ``p ×`` the median completion time (of the last 64
+          completions, needs ≥ 3 samples) is re-dispatched to a free
+          slot; first result wins, the loser's late reply is discarded by
+          the epoch/held machinery.  Costs one attempt from the budget.
+        * ``on_failure="skip"`` — a worker-reported bundle failure or an
+          exhausted attempt budget *skips* that bundle instead of
+          raising, and the stream keeps draining.  A skipped bundle is
+          announced as ``(idx, None)`` so a consumer folding in index
+          order can advance past the hole promptly (and is recorded in
+          ``last_recovery["skipped"]``).
+
+        Raises RuntimeError on a peer-reported replay failure or poison
+        bundle (under ``on_failure="raise"``), ``CrashLoopError`` when
+        the transport's breaker trips, RuntimeError when the whole pool
+        is dead (with no respawn due) and work is still pending;
+        TimeoutError past the deadline.  Completed bundles are dropped as
+        their reports are yielded — a raised stream's stragglers are
+        recognized by their stale epoch in later runs, exactly like
+        ``run``'s.
         """
         if self._closed:
             raise RuntimeError(f"{type(self).__name__} is closed")
+        if on_failure not in ("raise", "skip"):
+            raise ValueError(f"on_failure must be 'raise' or 'skip', "
+                             f"got {on_failure!r}")
+        max_att = _MAX_ATTEMPTS if max_attempts is None else int(max_attempts)
+        if max_att < 1:
+            raise ValueError(f"max_attempts must be >= 1, got {max_attempts}")
+        if speculate is not None and speculate < 1.0:
+            raise ValueError("speculate is a multiple of the median "
+                             f"completion time and must be >= 1.0, "
+                             f"got {speculate}")
         self._assemble(timeout)
         # A raised run (worker error, poison bundle, timeout) leaves
         # stragglers replaying on live peers.  Each run gets a fresh
@@ -290,7 +399,43 @@ class FleetBase:
         attempts: Dict[int, int] = {}
         deadline = time.monotonic() + timeout
         base_ups, base_downs = self.scale_ups, self.scale_downs
+        base_deaths, base_hung = self.worker_deaths, self.hung_reaped
+        base_mttr = len(self._mttr_samples)
         peak_workers = peak_queue = peak_window = 0
+        # -- recovery accounting (this stream only) --------------------------
+        disp_at: Dict[int, float] = {}       # idx -> latest dispatch time
+        requeue_ts: Dict[int, float] = {}    # idx -> when it re-entered pending
+        done_times: List[float] = []         # dispatch->ok latencies
+        skipped: List[int] = []
+        requeued = 0
+        requeue_wait = 0.0
+        requeue_waits = 0
+        lost_replay = 0.0
+        spec_extra: Set[int] = set()         # idxs with a live second copy
+        spec_peer: Dict[int, Peer] = {}      # idx -> its speculative peer
+        spec_dispatches = spec_wins = 0
+        pings = 0
+
+        def account_requeue(peer: Peer, now: float) -> None:
+            """Charge a dying/hung peer's current-epoch work before _reap
+            requeues it: count the requeue and the replay time lost."""
+            nonlocal requeued, lost_replay
+            for e, i in peer.tasks:
+                if e == epoch and i in held:
+                    requeued += 1
+                    t = disp_at.pop(i, None)
+                    if t is not None:
+                        lost_replay += now - t
+                    requeue_ts[i] = now
+
+        def skip(idx: int) -> None:
+            skipped.append(idx)
+            held.pop(idx, None)
+            attempts.pop(idx, None)
+            disp_at.pop(idx, None)
+            spec_extra.discard(idx)
+            spec_peer.pop(idx, None)
+
         try:
             while True:
                 # -- admission: compile-ahead at most `window` bundles ----
@@ -314,15 +459,25 @@ class FleetBase:
                     raise TimeoutError(
                         f"fleet run exceeded {timeout}s with {len(held)} "
                         "bundle(s) unfinished")
+                self._tick(pending)    # service due backoff respawns
                 # -- dispatch to free slots (death noticed on send is
                 # handled exactly like death noticed on receive)
                 for peer in list(self._peers):
                     while pending and peer.free_slots > 0:
                         if not peer.alive:
+                            account_requeue(peer, time.monotonic())
                             self._reap(peer, pending, epoch)
                             break
                         idx = pending.popleft()
-                        if attempts[idx] >= _MAX_ATTEMPTS:
+                        if idx not in held:
+                            # completed by a speculative twin or skipped
+                            # while it waited in the queue — nothing to do
+                            continue
+                        if attempts[idx] >= max_att:
+                            if on_failure == "skip":
+                                skip(idx)
+                                yield idx, None
+                                continue
                             raise RuntimeError(
                                 f"bundle {idx} ({held[idx].command!r}) "
                                 f"failed {attempts[idx]} dispatch attempts "
@@ -333,8 +488,19 @@ class FleetBase:
                         except PeerGone:
                             pending.appendleft(idx)
                             attempts[idx] -= 1
+                            account_requeue(peer, time.monotonic())
                             self._reap(peer, pending, epoch)
                             break
+                        now = time.monotonic()
+                        disp_at[idx] = now
+                        # a dispatch is an interaction: restart the liveness
+                        # window, or a peer idle longer than the timeout
+                        # would be reaped the moment it got new work
+                        peer.last_seen = now
+                        t = requeue_ts.pop(idx, None)
+                        if t is not None:
+                            requeue_wait += now - t
+                            requeue_waits += 1
                 # -- elasticity: queue depth drives the pool size ---------
                 if self._autoscale:
                     if pending and not any(p.alive and p.free_slots > 0
@@ -348,12 +514,59 @@ class FleetBase:
                             self._retire(p)
                 peak_workers = max(peak_workers,
                                    sum(p.capacity for p in self._peers))
-                if not self._peers:
+                # -- liveness: reap hung-but-connected peers --------------
+                if liveness_timeout is not None:
+                    now = time.monotonic()
+                    for peer in list(self._peers):
+                        # only *ready* peers: a still-warming worker is
+                        # paying its jax-import bill, not hanging
+                        if peer.ready and peer.tasks \
+                                and now - peer.last_seen > liveness_timeout:
+                            self.hung_reaped += 1
+                            account_requeue(peer, now)
+                            self._reap(peer, pending, epoch, hung=True)
+                # -- speculation: soft per-bundle timeout -----------------
+                if speculate is not None and not pending \
+                        and len(done_times) >= 3:
+                    median = statistics.median(done_times[-64:])
+                    threshold = speculate * median
+                    now = time.monotonic()
+                    for peer in list(self._peers):
+                        for e, idx in list(peer.tasks):
+                            if (e != epoch or idx not in held
+                                    or idx in spec_extra
+                                    or attempts[idx] >= max_att
+                                    or now - disp_at.get(idx, now)
+                                    <= threshold):
+                                continue
+                            twin = next(
+                                (p for p in self._peers
+                                 if p is not peer and p.alive and p.ready
+                                 and p.free_slots > 0), None)
+                            if twin is None:
+                                continue
+                            attempts[idx] += 1
+                            try:
+                                twin.dispatch(epoch, idx, held[idx])
+                            except PeerGone:
+                                attempts[idx] -= 1
+                                account_requeue(twin, time.monotonic())
+                                self._reap(twin, pending, epoch)
+                                continue
+                            spec_extra.add(idx)
+                            spec_peer[idx] = twin
+                            spec_dispatches += 1
+                            disp_at[idx] = time.monotonic()
+                            twin.last_seen = disp_at[idx]
+                if not self._peers and not self._pending_refill():
                     raise RuntimeError(
                         f"all fleet workers died ({self.worker_deaths} "
                         f"death(s)) with {len(held)} bundle(s) pending")
                 # -- collect ----------------------------------------------
-                for obj in self._wait(0.5):
+                evs = self._wait(0.5)
+                if not evs and not self._peers:
+                    time.sleep(0.05)   # backoff respawn still pending
+                for obj in evs:
                     peer = self._peer_for(obj)
                     if peer is None:
                         self._handle_extra(obj)
@@ -361,22 +574,41 @@ class FleetBase:
                     try:
                         msg = peer.recv()
                     except PeerGone:
+                        account_requeue(peer, time.monotonic())
                         self._reap(peer, pending, epoch)
                         continue
+                    now = time.monotonic()
+                    peer.last_seen = now
                     kind = msg[0]
-                    if kind == "ready":
+                    if kind == "ping":
+                        pings += 1
+                    elif kind == "ready":
                         peer.ready = True
+                        self._note_ready()
                     elif kind == "ok":
                         _, e, idx, rep = msg
                         peer.tasks.discard((e, idx))
-                        if e == epoch:
+                        if e == epoch and idx in held:
+                            t = disp_at.pop(idx, None)
+                            if t is not None:
+                                done_times.append(max(0.0, now - t))
+                            twin = spec_peer.pop(idx, None)
+                            if twin is not None and twin is peer:
+                                spec_wins += 1
+                            spec_extra.discard(idx)
                             del held[idx]
                             attempts.pop(idx, None)
                             yield idx, rep
                     elif kind == "retry":
                         _, e, idx, _reason = msg
                         peer.tasks.discard((e, idx))
-                        if e == epoch:
+                        if e == epoch and idx in held \
+                                and idx not in pending:
+                            requeued += 1
+                            t = disp_at.pop(idx, None)
+                            if t is not None:
+                                lost_replay += now - t
+                            requeue_ts[idx] = now
                             pending.append(idx)
                     elif kind == "err":
                         _, e, idx, tb = msg
@@ -385,7 +617,11 @@ class FleetBase:
                                 "fleet worker failed on initialization:"
                                 f"\n{tb}")
                         peer.tasks.discard((e, idx))  # terminal either way
-                        if e == epoch:
+                        if e == epoch and idx in held:
+                            if on_failure == "skip":
+                                skip(idx)
+                                yield idx, None
+                                continue
                             raise RuntimeError(
                                 f"fleet worker ({peer.describe()}) failed "
                                 f"on bundle {idx} ({held[idx].command!r}):"
@@ -403,20 +639,45 @@ class FleetBase:
                 "peak_queue_depth": peak_queue,
                 "peak_window": peak_window,
             }
+            mttr = self._mttr_samples[base_mttr:]
+            self.last_recovery = {
+                "worker_deaths": self.worker_deaths - base_deaths,
+                "hung_reaped": self.hung_reaped - base_hung,
+                "requeued": requeued,
+                "requeue_latency_s": (requeue_wait / requeue_waits
+                                      if requeue_waits else 0.0),
+                "lost_replay_s": lost_replay,
+                "mttr_s": (sum(mttr) / len(mttr)) if mttr else None,
+                "skipped": sorted(skipped),
+                "speculative_dispatches": spec_dispatches,
+                "speculative_wins": spec_wins,
+                "heartbeats": pings,
+            }
 
     def run(self, bundles: Iterable[ScheduleBundle], *,
-            timeout: float = 600.0,
-            window: Optional[int] = None) -> List[EmulationReport]:
+            timeout: float = 600.0, window: Optional[int] = None,
+            max_attempts: Optional[int] = None,
+            liveness_timeout: Optional[float] = None,
+            speculate: Optional[float] = None,
+            on_failure: str = "raise") -> List[EmulationReport]:
         """Replay every bundle; returns reports in bundle order.
 
         The materializing wrapper over ``stream`` — same failure
         semantics, but all reports are held until the source is drained.
         Prefer consuming ``stream`` directly for unbounded sources.
+        Under ``on_failure="skip"`` skipped bundles leave no entry, so
+        the list may be shorter than the source (``last_recovery`` has
+        the skipped indices).
         """
         results: Dict[int, EmulationReport] = {}
-        for idx, rep in self.stream(bundles, timeout=timeout, window=window):
-            results[idx] = rep
-        return [results[i] for i in range(len(results))]
+        for idx, rep in self.stream(bundles, timeout=timeout, window=window,
+                                    max_attempts=max_attempts,
+                                    liveness_timeout=liveness_timeout,
+                                    speculate=speculate,
+                                    on_failure=on_failure):
+            if rep is not None:
+                results[idx] = rep
+        return [results[i] for i in sorted(results)]
 
     def close(self) -> None:
         if self._closed:
@@ -477,6 +738,8 @@ class _PipePeer(Peer):
         except (EOFError, ConnectionResetError, OSError) as e:
             raise PeerGone(str(e)) from e
         kind = msg[0]
+        if kind == "ping":
+            return ("ping",)
         if kind == "ready":
             return ("ready", msg[1])
         if kind == "ok":
@@ -499,8 +762,22 @@ class _PipePeer(Peer):
             self.conn.close()
         except OSError:
             pass
-        # instant for a reaped (dead) process; grace for a polite stop
-        self.proc.join(timeout=5.0)
+        # instant for a reaped (dead) process; bounded grace for a polite
+        # stop — a worker that outlives it is wedged and gets the axe
+        self.proc.join(timeout=2.0)
+        if self.proc.is_alive():
+            self.proc.terminate()
+            self.proc.join(timeout=2.0)
+
+    def destroy(self):
+        # hung worker: no grace it will never honor — terminate first
+        try:
+            self.conn.close()
+        except OSError:
+            pass
+        if self.proc.is_alive():
+            self.proc.terminate()
+        self.proc.join(timeout=2.0)
 
     def describe(self) -> str:
         return f"worker pid {self.proc.pid}"
@@ -524,7 +801,9 @@ class ProcessFleet(FleetBase):
 
     def __init__(self, n_workers: int, spec: WorkerSpec, *,
                  respawn: bool = True, max_respawns: Optional[int] = None,
-                 min_workers: Optional[int] = None, autoscale: bool = False):
+                 min_workers: Optional[int] = None, autoscale: bool = False,
+                 respawn_backoff: Tuple[float, float] = (0.1, 5.0),
+                 crash_loop: Tuple[int, float] = (5, 10.0)):
         if n_workers < 1:
             raise ValueError("ProcessFleet needs n_workers >= 1")
         if min_workers is not None and not autoscale:
@@ -544,10 +823,29 @@ class ProcessFleet(FleetBase):
         if self._scale_min > n_workers:
             raise ValueError(f"min_workers={min_workers} exceeds "
                              f"n_workers={n_workers}")
+        # -- respawn pacing: exponential backoff + crash-loop breaker -------
+        self._backoff_base, self._backoff_cap = respawn_backoff
+        self._crash_limit, self._crash_window = crash_loop
+        self._death_log: Deque[float] = deque()   # deaths inside the window
+        self._respawn_due: List[float] = []       # deferred spawn deadlines
+        self._death_streak = 0
+        self._last_death = float("-inf")
+        # jitter comes from the chaos-safe seeded RNG so backoff delays —
+        # and therefore fault *timings* — replay identically given the
+        # same policy seed
+        chaos = getattr(spec, "chaos", None)
+        self._backoff_rng = (chaos.rng("coordinator")
+                             if chaos is not None else Random(0))
+        self._spawned = 0                         # spawn-ordinal -> scope
         for _ in range(self._scale_min if autoscale else n_workers):
             self._spawn()
 
     def _spawn(self) -> None:
+        # the spawn ordinal names the worker's deterministic chaos scope:
+        # the k-th worker this pool ever starts is "worker:k", on every
+        # run with the same policy
+        scope = f"worker:{self._spawned}"
+        self._spawned += 1
         parent_conn, child_conn = self._ctx.Pipe()
         # The mesh's device count must reach the child's XLA before its
         # backend initializes; setting it in the *parent's* environment
@@ -564,7 +862,7 @@ class ProcessFleet(FleetBase):
                   f"{self.spec.mesh.device_count}")
         try:
             proc = self._ctx.Process(target=worker_loop,
-                                     args=(child_conn, self.spec),
+                                     args=(child_conn, self.spec, scope),
                                      daemon=True)
             proc.start()
         finally:
@@ -577,10 +875,47 @@ class ProcessFleet(FleetBase):
         self._peers.append(_PipePeer(proc, parent_conn))
 
     def _refill(self, pending: Deque[int]) -> None:
-        if self._respawn and self._respawns_left > 0:
-            self._respawns_left -= 1
-            self.respawns += 1
-            self._spawn()
+        """A worker died: schedule a replacement with exponential backoff
+        (a respawn is *deferred*, serviced by ``_tick`` on scheduler
+        passes) and trip the crash-loop breaker if this spec keeps dying.
+        """
+        if not self._respawn or self._respawns_left <= 0:
+            return
+        now = time.monotonic()
+        self._death_log.append(now)
+        while self._death_log and now - self._death_log[0] > \
+                self._crash_window:
+            self._death_log.popleft()
+        if self._crash_limit and len(self._death_log) >= self._crash_limit:
+            raise CrashLoopError(
+                f"fleet worker spec is crash-looping: "
+                f"{len(self._death_log)} death(s) within "
+                f"{self._crash_window:.1f}s (breaker limit "
+                f"{self._crash_limit}) — refusing to burn the remaining "
+                f"respawn budget ({self._respawns_left})")
+        if now - self._last_death <= self._crash_window:
+            self._death_streak += 1
+        else:
+            self._death_streak = 1
+        self._last_death = now
+        delay = min(self._backoff_cap,
+                    self._backoff_base * (2 ** (self._death_streak - 1)))
+        delay *= 0.5 + self._backoff_rng.random()     # jitter: 0.5x-1.5x
+        self._respawns_left -= 1
+        self._fault_opened.append(now)                # MTTR window opens
+        self._respawn_due.append(now + delay)
+
+    def _tick(self, pending: Deque[int]) -> None:
+        now = time.monotonic()
+        due = [t for t in self._respawn_due if t <= now]
+        if due:
+            self._respawn_due = [t for t in self._respawn_due if t > now]
+            for _ in due:
+                self.respawns += 1
+                self._spawn()
+
+    def _pending_refill(self) -> bool:
+        return bool(self._respawn_due)
 
     def _scale_up(self) -> bool:
         if len(self._peers) >= self._scale_max:
@@ -594,14 +929,34 @@ class ProcessFleet(FleetBase):
         return [p.proc.pid for p in self._peers if p.alive]
 
     def close(self) -> None:
+        """Tear the pool down in parallel: issue every stop first, then
+        join all workers against *one* shared grace deadline — closing a
+        large (or dead) pool costs one grace period, not one per worker.
+        """
         if self._closed:
             return
+        self._closed = True
+        self._respawn_due.clear()           # no respawns into a closed pool
         peers = list(self._peers)
-        super().close()                     # stop + close (join 5s each)
-        for p in peers:                     # stragglers get the axe
+        self._peers.clear()
+        for p in peers:
+            p.stop()                        # all stops in flight first
+        for p in peers:
+            try:
+                p.conn.close()
+            except OSError:
+                pass
+        deadline = time.monotonic() + 5.0   # one shared grace for the pool
+        for p in peers:
+            p.proc.join(timeout=max(0.0, deadline - time.monotonic()))
+        for p in peers:                     # stragglers get the axe...
             if p.proc.is_alive():
                 p.proc.terminate()
-                p.proc.join(timeout=2.0)
+        deadline = time.monotonic() + 2.0   # ...against one shared deadline
+        for p in peers:
+            if p.proc.is_alive():
+                p.proc.join(timeout=max(0.0, deadline - time.monotonic()))
+        self._close_extras()
 
 
 def run_process_fleet(emulator: Emulator, profiles, *, max_workers: int = 4,
@@ -611,7 +966,13 @@ def run_process_fleet(emulator: Emulator, profiles, *, max_workers: int = 4,
                       fleet: Optional[ProcessFleet] = None,
                       window: Optional[int] = None, autoscale: bool = False,
                       min_workers: Optional[int] = None,
-                      collect: str = "reports") -> FleetReport:
+                      collect: str = "reports",
+                      max_attempts: Optional[int] = None,
+                      liveness_timeout: Optional[float] = None,
+                      speculate: Optional[float] = None,
+                      on_failure: str = "raise",
+                      chaos: Optional[ChaosPolicy] = None,
+                      max_respawns: Optional[int] = None) -> FleetReport:
     """Compile → detach → ship, streamed: one-call process-fleet replay.
 
     Backs ``Emulator.emulate_many(executor="process")``.  ``profiles`` may
@@ -620,13 +981,24 @@ def run_process_fleet(emulator: Emulator, profiles, *, max_workers: int = 4,
     pulls, at most ``window`` bundles ahead of dispatch, so coordinator
     memory is bounded by the window even for a production day's worth of
     profiles.  Pass ``fleet`` to reuse a warm ``ProcessFleet`` (the caller
-    keeps ownership); otherwise a pool sized ``min(max_workers,
-    len(profiles))`` (or starting at ``min_workers`` when ``autoscale``)
-    is spawned and torn down around this one run.  With ``mesh_spec`` set,
-    wire-byte runs compile to mesh-bound fused segments and every worker
-    builds its own mesh — collective legs move bytes inside the workers'
-    segment scans.  ``collect="totals"`` drops per-profile reports and
-    returns aggregates only (the bounded-memory soak mode).
+    keeps ownership; ``chaos``/``max_respawns`` are then the caller's
+    business, baked into the warm pool's spec); otherwise a pool sized
+    ``min(max_workers, len(profiles))`` (or starting at ``min_workers``
+    when ``autoscale``) is spawned and torn down around this one run.
+    With ``mesh_spec`` set, wire-byte runs compile to mesh-bound fused
+    segments and every worker builds its own mesh — collective legs move
+    bytes inside the workers' segment scans.  ``collect="totals"`` drops
+    per-profile reports and returns aggregates only (the bounded-memory
+    soak mode).
+
+    Hardening: ``liveness_timeout`` arms hung-peer reaping (workers are
+    spawned heartbeating at a quarter of it), ``speculate``/
+    ``max_attempts``/``on_failure`` pass through to ``stream``, and a
+    seeded ``chaos`` policy makes every spawned worker inject its
+    scheduled faults.  Stats/scaling/recovery are snapshotted even when
+    the stream raises — the partial ``FleetReport`` rides on the raised
+    exception as ``.fleet_report`` so failure paths keep their recovery
+    accounting.
     """
     n_samples = {"n": 0}                 # true profile samples compiled
 
@@ -644,25 +1016,53 @@ def run_process_fleet(emulator: Emulator, profiles, *, max_workers: int = 4,
         n = len(profiles) if hasattr(profiles, "__len__") else None
         workers = max(1, min(max_workers, n)) if n is not None \
             else max(1, max_workers)
-        fleet = ProcessFleet(workers, WorkerSpec(emulator=emulator.spec(),
-                                                 mesh=mesh_spec),
-                             autoscale=autoscale, min_workers=min_workers)
+        heartbeat_s = (max(0.1, liveness_timeout / 4.0)
+                       if liveness_timeout else 0.0)
+        fleet = ProcessFleet(workers,
+                             WorkerSpec(emulator=emulator.spec(),
+                                        mesh=mesh_spec,
+                                        heartbeat_s=heartbeat_s,
+                                        chaos=chaos),
+                             autoscale=autoscale, min_workers=min_workers,
+                             max_respawns=max_respawns)
     t0 = time.perf_counter()
     fold = ReportFold(keep_reports=collect != "totals")
-    try:
-        for idx, rep in fleet.stream(_bundles(), timeout=timeout,
-                                     window=window):
-            fold.add(idx, rep)
-        stats = {"workers": fleet.n_workers,
+
+    def _snapshot():
+        return ({"workers": fleet.n_workers,
                  "worker_deaths": fleet.worker_deaths,
-                 "respawns": fleet.respawns}
-        scaling = dict(fleet.last_scaling)
-        n_workers = fleet.n_workers
+                 "respawns": fleet.respawns},
+                dict(fleet.last_scaling), dict(fleet.last_recovery),
+                fleet.n_workers)
+
+    def _report(stats, scaling, recovery, n_workers):
+        return FleetReport(
+            reports=fold.reports, wall_s=time.perf_counter() - t0,
+            serial_s=fold.serial_s, max_workers=n_workers,
+            cache_stats=stats, totals=fold.totals,
+            n_samples=n_samples["n"], n_replayed=fold.n_done,
+            scaling=scaling, recovery=recovery)
+
+    gen = fleet.stream(_bundles(), timeout=timeout, window=window,
+                       max_attempts=max_attempts,
+                       liveness_timeout=liveness_timeout,
+                       speculate=speculate, on_failure=on_failure)
+    try:
+        for idx, rep in gen:
+            if rep is None:
+                fold.skip(idx)     # degraded-mode hole: fold past it
+            else:
+                fold.add(idx, rep)
+        snap = _snapshot()
+    except BaseException as e:
+        # the stream raised: close the generator so its finally has
+        # published this run's scaling/recovery, then snapshot — the
+        # partially-folded totals and fault accounting ride out on the
+        # exception instead of being lost
+        gen.close()
+        e.fleet_report = _report(*_snapshot())
+        raise
     finally:
         if own:
             fleet.close()
-    wall = time.perf_counter() - t0
-    return FleetReport(
-        reports=fold.reports, wall_s=wall, serial_s=fold.serial_s,
-        max_workers=n_workers, cache_stats=stats, totals=fold.totals,
-        n_samples=n_samples["n"], n_replayed=fold.n_done, scaling=scaling)
+    return _report(*snap)

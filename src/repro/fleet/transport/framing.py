@@ -86,11 +86,20 @@ def handshake(sock: socket.socket) -> None:
     recv_hello(sock)
 
 
-def send_frame(sock: socket.socket, obj) -> None:
+def send_frame(sock: socket.socket, obj, *, _mangle=None) -> None:
+    """Pickle ``obj`` into one length-prefixed frame.
+
+    ``_mangle`` is a fault-injection hook (``bytes -> bytes``, length
+    preserved) used by the chaos engine and the framing tests to put a
+    corrupt-but-well-framed payload on the wire; production callers
+    leave it None.
+    """
     payload = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
     if len(payload) > MAX_FRAME_BYTES:
         raise FramingError(f"refusing to send a {len(payload)}-byte frame "
                            f"(cap {MAX_FRAME_BYTES})")
+    if _mangle is not None:
+        payload = _mangle(payload)
     try:
         sock.sendall(_LEN.pack(len(payload)) + payload)
     except (BrokenPipeError, ConnectionResetError, OSError) as e:
@@ -103,7 +112,17 @@ def recv_frame(sock: socket.socket):
     if n > MAX_FRAME_BYTES:
         raise FramingError(f"frame header announces {n} bytes "
                            f"(cap {MAX_FRAME_BYTES}) — corrupt stream")
-    return pickle.loads(_recv_exact(sock, n, what=f"{n}-byte frame payload"))
+    payload = _recv_exact(sock, n, what=f"{n}-byte frame payload")
+    try:
+        return pickle.loads(payload)
+    except Exception as e:  # noqa: BLE001 — unpickling bad bytes can raise
+        # almost anything (UnpicklingError, EOFError, AttributeError...);
+        # a well-framed but undecodable payload is a corrupt stream, and
+        # must surface as FramingError -> PeerGone, not leak raw pickle
+        # internals into the scheduler
+        raise FramingError(
+            f"frame payload failed to unpickle ({type(e).__name__}: {e}) "
+            "— corrupt stream") from e
 
 
 def _recv_exact(sock: socket.socket, n: int, *, what: str,

@@ -94,6 +94,8 @@ class AgentPeer(Peer):
             # one — either way this peer is done
             raise PeerGone(str(e)) from e
         kind = msg[0]
+        if kind == "ping":
+            return ("ping",)
         if kind == "ready":
             info = msg[1]
             self.capacity = max(1, int(info.get("workers", 1)))
@@ -265,28 +267,47 @@ def run_remote_fleet(emulator: Emulator, profiles, *,
                      fleet: Optional[RemoteFleet] = None,
                      window: Optional[int] = None, autoscale: bool = False,
                      min_workers: Optional[int] = None,
-                     collect: str = "reports") -> FleetReport:
+                     collect: str = "reports",
+                     max_attempts: Optional[int] = None,
+                     liveness_timeout: Optional[float] = None,
+                     speculate: Optional[float] = None,
+                     on_failure: str = "raise",
+                     chaos=None) -> FleetReport:
     """Compile → detach → ship over TCP, streamed: one-call remote replay.
 
     Backs ``Emulator.emulate_many(executor="remote")``.  ``profiles`` may
     be any iterable — a lazy source is compiled as the scheduler pulls, at
     most ``window`` bundles ahead of dispatch, so coordinator memory is
     bounded by the window however long the stream runs.  Pass ``fleet`` to
-    reuse a warm ``RemoteFleet`` (the caller keeps ownership); otherwise
-    one is assembled from ``hosts``/``listen``/``agents`` and torn down
-    around this run — tearing down tells the agents to exit, so one-shot
-    runs don't leave orphaned worker pools on other machines.  With
+    reuse a warm ``RemoteFleet`` (the caller keeps ownership; the spec —
+    chaos policy included — is then the caller's); otherwise one is
+    assembled from ``hosts``/``listen``/``agents`` and torn down around
+    this run — tearing down tells the agents to exit, so one-shot runs
+    don't leave orphaned worker pools on other machines.  With
     ``mesh_spec`` set, every agent's workers build their own device mesh
     and collective legs execute on each host.  ``collect="totals"`` drops
     per-profile reports and returns index-order-folded aggregates only.
+
+    Hardening: ``liveness_timeout`` arms hung-agent reaping (the shipped
+    spec asks agents to heartbeat at a quarter of it), ``speculate``/
+    ``max_attempts``/``on_failure`` pass through to ``stream``, and a
+    seeded ``chaos`` policy travels in the spec so agents *and* their
+    local workers inject the same deterministic fault schedule as a
+    process fleet given the same policy.  Stats/scaling/recovery are
+    snapshotted even when the stream raises — the partial ``FleetReport``
+    rides on the exception as ``.fleet_report``.
     """
     own = fleet is None
     if own:
         # assemble (and config-validate / dial) BEFORE compiling: a bad
         # hosts/listen config or unreachable agent should not cost a full
         # fleet's worth of trace/compile work first
+        heartbeat_s = (max(0.1, liveness_timeout / 4.0)
+                       if liveness_timeout else 0.0)
         fleet = RemoteFleet(WorkerSpec(emulator=emulator.spec(),
-                                       mesh=mesh_spec),
+                                       mesh=mesh_spec,
+                                       heartbeat_s=heartbeat_s,
+                                       chaos=chaos),
                             hosts=hosts, listen=listen, agents=agents,
                             autoscale=autoscale, min_workers=min_workers)
     t0 = time.perf_counter()
@@ -302,19 +323,38 @@ def run_remote_fleet(emulator: Emulator, profiles, *,
             n_samples["n"] += b.n_profile_samples
             yield b
 
+    def _snapshot():
+        return ({"agents": fleet.n_agents, "workers": fleet.n_workers,
+                 "worker_deaths": fleet.worker_deaths},
+                dict(fleet.last_scaling), dict(fleet.last_recovery),
+                fleet.n_workers)
+
+    def _report(stats, scaling, recovery, workers):
+        return FleetReport(
+            reports=fold.reports, wall_s=time.perf_counter() - t0,
+            serial_s=fold.serial_s, max_workers=workers, cache_stats=stats,
+            totals=fold.totals, n_samples=n_samples["n"],
+            n_replayed=fold.n_done, scaling=scaling, recovery=recovery)
+
+    gen = fleet.stream(_bundles(), timeout=timeout, window=window,
+                       max_attempts=max_attempts,
+                       liveness_timeout=liveness_timeout,
+                       speculate=speculate, on_failure=on_failure)
     try:
-        for idx, rep in fleet.stream(_bundles(), timeout=timeout,
-                                     window=window):
-            fold.add(idx, rep)
-        stats = {"agents": fleet.n_agents, "workers": fleet.n_workers,
-                 "worker_deaths": fleet.worker_deaths}
-        scaling = dict(fleet.last_scaling)
-        workers = fleet.n_workers
+        for idx, rep in gen:
+            if rep is None:
+                fold.skip(idx)     # degraded-mode hole: fold past it
+            else:
+                fold.add(idx, rep)
+        snap = _snapshot()
+    except BaseException as e:
+        # close the generator first so its finally published this run's
+        # scaling/recovery records, then let the partial report ride out
+        # on the exception
+        gen.close()
+        e.fleet_report = _report(*_snapshot())
+        raise
     finally:
         if own:
             fleet.close()
-    wall = time.perf_counter() - t0
-    return FleetReport(
-        reports=fold.reports, wall_s=wall, serial_s=fold.serial_s,
-        max_workers=workers, cache_stats=stats, totals=fold.totals,
-        n_samples=n_samples["n"], n_replayed=fold.n_done, scaling=scaling)
+    return _report(*snap)

@@ -14,14 +14,27 @@ Protocol (pickled tuples over the pipe):
   worker -> parent:  ("ready", info_dict)
                      ("ok", idx, EmulationReport)
                      ("err", idx | None, traceback_str)
+                     ("ping",)   heartbeat, sent every ``heartbeat_s``
+                                 from a daemon thread when the spec asks
 
 A bundle that fails to replay sends ``err`` and the worker keeps serving
 (the parent decides whether to abort); a failure during initialization
 sends ``err`` with ``idx=None`` and exits.
+
+When the spec carries a ``ChaosPolicy``, the worker derives a
+deterministic fault actor from its spawn ``scope`` (``"worker:<n>"``)
+and consults it before replaying each bundle: it may die without
+replying (``kill``), go silent with the pipe open and heartbeats paused
+(``hang`` — the failure only heartbeat liveness can see), reply an
+injected ``err`` (``fail``), or straggle (``delay``) before serving
+normally.  All sends go through one lock so the heartbeat thread and
+the serve loop never interleave a pickle mid-frame.
 """
 from __future__ import annotations
 
 import os
+import threading
+import time
 import traceback
 
 
@@ -63,8 +76,16 @@ def _init(spec):
                 "warm": bool(spec.warmup)}
 
 
-def worker_loop(conn, spec) -> None:
+def worker_loop(conn, spec, scope: str = "worker:0") -> None:
     """Process entry point: initialize, announce readiness, serve bundles."""
+    chaos = getattr(spec, "chaos", None)
+    actor = chaos.actor(scope) if chaos is not None else None
+    if actor is not None and chaos.kill_on_init:
+        # the crash-loop test vector: a spec that can never come up.
+        # Die before the (expensive) emulator build so the breaker is
+        # exercised at spawn cadence, not jax-import cadence.
+        conn.close()
+        os._exit(13)
     try:
         em, info = _init(spec)
     except BaseException:  # noqa: BLE001 — report init failure, then die
@@ -73,7 +94,27 @@ def worker_loop(conn, spec) -> None:
         finally:
             conn.close()
         return
-    conn.send(("ready", info))
+    send_lock = threading.Lock()
+    hb_stop = threading.Event()
+    hb_pause = threading.Event()
+
+    def send(msg) -> None:
+        with send_lock:
+            conn.send(msg)
+
+    send(("ready", info))
+    heartbeat_s = getattr(spec, "heartbeat_s", 0.0)
+    if heartbeat_s and heartbeat_s > 0:
+        def _beat():
+            while not hb_stop.wait(heartbeat_s):
+                if hb_pause.is_set():
+                    continue          # hung workers don't heartbeat
+                try:
+                    send(("ping",))
+                except (BrokenPipeError, OSError):
+                    return
+        threading.Thread(target=_beat, daemon=True,
+                         name="fleet-heartbeat").start()
     try:
         while True:
             try:
@@ -83,9 +124,33 @@ def worker_loop(conn, spec) -> None:
             if msg[0] == "stop":
                 break
             if msg[0] != "run":
-                conn.send(("err", None, f"unknown message {msg[0]!r}"))
+                send(("err", None, f"unknown message {msg[0]!r}"))
                 continue
             _, idx, bundle = msg
+            if actor is not None:
+                action = actor.on_dispatch()
+                if action == "kill":
+                    # die mid-bundle, before replying: the coordinator
+                    # must notice the dead pipe, requeue idx, and charge
+                    # the attempt budget
+                    conn.close()
+                    os._exit(17)
+                if action == "fail":
+                    send(("err", idx,
+                          f"chaos: injected failure ({scope}, "
+                          f"dispatch {actor.dispatches})"))
+                    continue
+                if isinstance(action, tuple):
+                    what, seconds = action
+                    if what == "hang":
+                        # silent with the pipe open: no reply, no
+                        # heartbeat — only the liveness watermark can
+                        # tell this apart from a long bundle
+                        hb_pause.set()
+                        time.sleep(seconds)
+                        hb_pause.clear()
+                    elif what == "delay":
+                        time.sleep(seconds)   # straggler: serve, but late
             try:
                 rep = em.replay(bundle.rehydrate(),
                                 command=bundle.command,
@@ -95,9 +160,16 @@ def worker_loop(conn, spec) -> None:
                                 mem_scale=bundle.mem_scale,
                                 verify=bundle.verify)
             except BaseException:  # noqa: BLE001 — bad bundle, worker lives
-                conn.send(("err", idx, traceback.format_exc()))
+                try:
+                    send(("err", idx, traceback.format_exc()))
+                except (BrokenPipeError, OSError):
+                    break             # parent reaped us mid-hang: done
                 continue
-            conn.send(("ok", idx, rep))
+            try:
+                send(("ok", idx, rep))
+            except (BrokenPipeError, OSError):
+                break                 # parent reaped us mid-hang: done
     finally:
+        hb_stop.set()
         em.storage.cleanup()
         conn.close()

@@ -110,7 +110,10 @@ def _cmd_fleet(args) -> int:
                          listen=args.listen, agents=args.agents,
                          timeout=args.timeout, window=args.window,
                          autoscale=args.autoscale is not None,
-                         min_workers=args.autoscale)
+                         min_workers=args.autoscale,
+                         max_attempts=args.max_attempts,
+                         liveness_timeout=args.liveness,
+                         on_failure=args.on_failure)
     jobs = [_parse_job(j) for j in args.job]
     store = _store(args.store)
     profiles = None
@@ -141,6 +144,9 @@ def _cmd_fleet(args) -> int:
     if f.scaling:
         print("  scaling:", ", ".join(f"{k}={v}"
                                       for k, v in f.scaling.items()))
+    if f.recovery:
+        print("  recovery:", ", ".join(f"{k}={v}"
+                                       for k, v in f.recovery.items()))
     extra = {k: v for k, v in f.cache_stats.items()}
     if extra:
         print("  stats:", ", ".join(f"{k}={v}" for k, v in extra.items()))
@@ -189,6 +195,18 @@ def main(argv: Optional[List[str]] = None) -> int:
     fl.add_argument("--timeout", type=float, default=600.0, metavar="S",
                     help="abort the fleet replay after S seconds "
                          "(default 600)")
+    fl.add_argument("--max-attempts", type=int, default=3, metavar="N",
+                    help="per-profile dispatch budget before it is "
+                         "declared poison (default 3)")
+    fl.add_argument("--liveness", type=float, default=None, metavar="S",
+                    help="reap a worker/agent silent for S seconds and "
+                         "requeue its profiles (process/remote; arms "
+                         "heartbeats)")
+    fl.add_argument("--on-failure", choices=("raise", "skip"),
+                    default="raise",
+                    help="poison profile handling: fail the run (raise, "
+                         "default) or complete degraded with the holes "
+                         "listed under recovery (skip)")
     fl.add_argument("--host", action="append", default=[],
                     metavar="HOST:PORT",
                     help="dial a remote agent listening at HOST:PORT "
@@ -220,6 +238,11 @@ def main(argv: Optional[List[str]] = None) -> int:
                      "(the thread pool is fixed-size)")
         if args.autoscale is not None and args.autoscale < 1:
             ap.error("--autoscale MIN must be >= 1")
+        if args.max_attempts < 1:
+            ap.error("--max-attempts must be >= 1")
+        if args.liveness is not None and args.executor == "thread":
+            ap.error("--liveness requires --executor process or remote "
+                     "(threads have no peer to heartbeat)")
         if (args.host or args.listen or args.agents is not None) \
                 and args.executor != "remote":
             ap.error("--host/--listen/--agents require --executor remote")

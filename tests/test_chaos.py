@@ -1,0 +1,622 @@
+"""Chaos harness + liveness layer (ISSUE 7 contracts).
+
+Fast tests pin the deterministic fault engine in-process: identically
+seeded ``ChaosPolicy`` actors replay identical fault traces (across
+pickling, the way a policy actually travels to workers), ordinal streams
+stay aligned when fault kinds are toggled, and ``corrupt_bytes`` turns a
+well-framed payload into a loud ``FramingError`` end to end.  The
+scheduler hardening is pinned on in-process loopback peers: hung-peer
+liveness reaps a silent-but-connected peer and requeues its work, the
+per-bundle attempt budget is configurable (``max_attempts``),
+``on_failure="skip"`` completes a stream degraded with the holes folded
+past in index order, speculation re-dispatches stragglers with
+first-result-wins, a peer dying during ``warmup()`` is reaped without
+touching pending work, and agent-style ``retry`` replies keep the
+attempt/poison accounting exact under autoscale.
+
+Subprocess tests (``slow`` + ``subproc``) pin the engine on real
+workers: a seeded kill schedule reproduces the same death/requeue counts
+run after run with totals bit-identical to a fault-free replay, a hung
+worker (heartbeats paused, pipe open) is reaped within the liveness
+window instead of the 600s run deadline, a spec that can never
+initialize trips ``CrashLoopError`` instead of burning the respawn
+budget, and the same policy drives the same fault schedule through a
+remote agent on loopback TCP.
+"""
+import multiprocessing as mp
+import pickle
+import socket
+import time
+
+import pytest
+
+from repro.core import Emulator, ResourceVector, Sample, SynapseProfile
+from repro.core.emulator import EmulationReport, ReportFold
+from repro.fleet import (ChaosPolicy, CrashLoopError, FleetBase,
+                         FleetConfig, MeshSpec, Peer, PeerGone,
+                         ProcessFleet, ScheduleBundle, WorkerSpec)
+from repro.fleet.transport import framing
+
+TILE = 64
+BLOCK = 1 << 18
+FPI = 2.0 * TILE ** 3
+BPI = 2.0 * BLOCK
+
+
+def _em(**kw):
+    return Emulator(compute_tile=TILE, mem_block=BLOCK, **kw)
+
+
+def _rv(flops=0.0, hbm=0.0):
+    return ResourceVector(flops=flops, hbm_bytes=hbm)
+
+
+def _profile(rvs, command="chaos-test"):
+    return SynapseProfile(command=command,
+                          samples=[Sample(index=i, resources=r)
+                                   for i, r in enumerate(rvs)])
+
+
+# ---------------------------------------------------------------------------
+# policy + actor determinism (fast, pure)
+# ---------------------------------------------------------------------------
+
+def test_chaos_policy_validates():
+    with pytest.raises(ValueError, match="kill_every"):
+        ChaosPolicy(kill_every=0)
+    with pytest.raises(ValueError, match="kill_prob"):
+        ChaosPolicy(kill_prob=1.5)
+    with pytest.raises(ValueError, match="fail_nth"):
+        ChaosPolicy(fail_nth=-1)
+    with pytest.raises(ValueError, match="delay_s"):
+        ChaosPolicy(delay_s=-0.1)
+    with pytest.raises(ValueError, match="max_faults"):
+        ChaosPolicy(max_faults=-1)
+    assert not ChaosPolicy().active
+    assert ChaosPolicy(kill_every=3).active
+
+
+def test_chaos_actor_deterministic_across_pickle():
+    """The determinism contract: an actor's decision at ordinal n is a
+    pure function of (policy, scope, n) — including after the policy
+    rode a pickle to another process, and NOT keyed on Python's salted
+    hash()."""
+    pol = ChaosPolicy(seed=11, kill_prob=0.3, delay_every=7, delay_s=0.5,
+                      max_faults=5)
+    twin = pickle.loads(pickle.dumps(pol))
+    a, b = pol.actor("worker:2"), twin.actor("worker:2")
+    ta = [a.on_dispatch() for _ in range(50)]
+    tb = [b.on_dispatch() for _ in range(50)]
+    assert ta == tb
+    assert a.trace == b.trace and len(a.trace) == 5   # max_faults cap
+    # different scopes draw different streams
+    c = pol.actor("worker:3")
+    assert [c.on_dispatch() for _ in range(50)] != ta
+    # the coordinator-side RNG is scope-stable too
+    assert pol.rng("coordinator").random() == \
+        twin.rng("coordinator").random()
+
+
+def test_chaos_ordinal_streams_stay_aligned():
+    """Enabling one fault kind must not shift another's ordinals: the
+    kill_prob deaths of a policy land on the same dispatches whether or
+    not delays are also scheduled."""
+    base = ChaosPolicy(seed=4, kill_prob=0.2)
+    plus = ChaosPolicy(seed=4, kill_prob=0.2, delay_every=3, delay_s=0.01)
+    kills = lambda p: [n for n, act in enumerate(
+        (p.actor("worker:0").on_dispatch() for _ in range(80)), start=1)
+        if act == "kill"]
+    assert kills(base) == kills(plus)
+    # interval kills are exact ordinals
+    acts = [ChaosPolicy(seed=0, kill_every=3).actor("w").on_dispatch()
+            for _ in range(1)]  # fresh actor each call: ordinal 1 -> None
+    assert acts == [None]
+    actor = ChaosPolicy(seed=0, kill_every=3, max_faults=1).actor("w")
+    seq = [actor.on_dispatch() for _ in range(9)]
+    assert seq == [None, None, "kill"] + [None] * 6   # budget spent at 3
+
+
+def test_chaos_corrupt_bytes_surfaces_as_framing_error():
+    """corrupt_frame end to end: the mangled payload is well-framed but
+    unpicklable, and recv_frame raises FramingError (-> PeerGone at the
+    scheduler) instead of leaking pickle internals."""
+    pol = ChaosPolicy()
+    payload = pickle.dumps(("ok", 1, 2, {"x": list(range(50))}))
+    bad = pol.corrupt_bytes(payload)
+    assert len(bad) == len(payload) and bad != payload
+    a, b = socket.socketpair()
+    a.settimeout(5.0)
+    b.settimeout(5.0)
+    try:
+        framing.send_frame(a, ("ok", 1, 2, {"x": list(range(50))}),
+                           _mangle=pol.corrupt_bytes)
+        with pytest.raises(framing.FramingError, match="unpickle"):
+            framing.recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+    # agent-side reply schedule: drop fires after N, corrupt exactly at N
+    actor = ChaosPolicy(drop_agent_after=2).actor("agent")
+    assert [actor.on_reply() for _ in range(4)] == \
+        [None, None, "drop", "drop"]
+    actor = ChaosPolicy(corrupt_frame_nth=2).actor("agent")
+    assert [actor.on_reply() for _ in range(3)] == [None, "corrupt", None]
+
+
+# ---------------------------------------------------------------------------
+# scheduler hardening (fast, in-process loopback peers)
+# ---------------------------------------------------------------------------
+
+class _EchoPeer(Peer):
+    """Loopback peer: dispatch writes the ok reply into its own pipe."""
+
+    def __init__(self):
+        super().__init__()
+        self._r, self._w = mp.Pipe(duplex=False)
+        self.ready = True
+
+    @property
+    def waitable(self):
+        return self._r
+
+    def dispatch(self, epoch, idx, bundle):
+        self.tasks.add((epoch, idx))
+        self._w.send(("ok", epoch, idx, self._report(bundle)))
+
+    @staticmethod
+    def _report(bundle):
+        return EmulationReport(command=bundle.command, ttc_s=1e-3,
+                               n_samples=bundle.n_profile_samples,
+                               consumed=bundle.planned, mode="fused")
+
+    def recv(self):
+        return self._r.recv()
+
+    def close(self):
+        self._r.close()
+        self._w.close()
+
+
+class _BlackholePeer(_EchoPeer):
+    """Accepts dispatches and never replies — the hung-peer vector: the
+    pipe stays open, so only the liveness watermark can reap it."""
+
+    def __init__(self):
+        super().__init__()
+        self.destroyed = False
+        self.swallowed = []
+
+    def dispatch(self, epoch, idx, bundle):
+        self.tasks.add((epoch, idx))
+        self.swallowed.append(idx)
+
+    def destroy(self):
+        self.destroyed = True
+        super().close()
+
+
+class _RetryPeer(_EchoPeer):
+    """Always replies ("retry", ...) — a peer whose local worker dies on
+    every dispatch, the attempt-budget vector."""
+
+    def __init__(self):
+        super().__init__()
+        self.dispatches = 0
+
+    def dispatch(self, epoch, idx, bundle):
+        self.dispatches += 1
+        self.tasks.add((epoch, idx))
+        self._w.send(("retry", epoch, idx, "test: local worker died"))
+
+
+class _FlakyPeer(_EchoPeer):
+    """Replies ("retry", ...) on the FIRST dispatch of each idx, serves
+    re-dispatches normally — agent-style transient worker loss."""
+
+    def __init__(self):
+        super().__init__()
+        self._seen = set()
+
+    def dispatch(self, epoch, idx, bundle):
+        self.tasks.add((epoch, idx))
+        if idx not in self._seen:
+            self._seen.add(idx)
+            self._w.send(("retry", epoch, idx, "test: flaky"))
+        else:
+            self._w.send(("ok", epoch, idx, self._report(bundle)))
+
+
+class _FailPeer(_EchoPeer):
+    """Replies ("err", ...) for the indices in ``bad`` — the degraded-
+    completion vector."""
+
+    def __init__(self, bad):
+        super().__init__()
+        self.bad = set(bad)
+
+    def dispatch(self, epoch, idx, bundle):
+        self.tasks.add((epoch, idx))
+        if idx in self.bad:
+            self._w.send(("err", epoch, idx, "test: injected failure"))
+        else:
+            self._w.send(("ok", epoch, idx, self._report(bundle)))
+
+
+class _DyingPeer(_EchoPeer):
+    """Raises PeerGone on its first recv — a peer that dies while the
+    pool warms up."""
+
+    def __init__(self):
+        super().__init__()
+        self.ready = False
+        self._w.send(("ready", {}))     # make the waitable fire
+
+    def recv(self):
+        raise PeerGone("test: died during warmup")
+
+
+class _LoopFleet(FleetBase):
+    def __init__(self, peers, *, autoscale=False, scale_max=3,
+                 min_workers=1):
+        super().__init__()
+        self._autoscale = autoscale
+        self._scale_min = min_workers
+        self._scale_max = scale_max
+        self._peers.extend(peers)
+
+    def _scale_up(self):
+        if len(self._peers) >= self._scale_max:
+            return False
+        self._peers.append(_EchoPeer())
+        self.scale_ups += 1
+        return True
+
+
+def _bundle(i):
+    # awkward float amounts: identical fold totals mean identical order
+    return ScheduleBundle(command=f"b{i}", payload={}, n_profile_samples=1,
+                          planned=_rv(flops=0.1 * i + 0.3, hbm=0.7 * i))
+
+
+def _fold(fleet, bundles, **kw):
+    fold = ReportFold()
+    for idx, rep in fleet.stream(bundles, **kw):
+        if rep is None:
+            fold.skip(idx)
+        else:
+            fold.add(idx, rep)
+    return fold
+
+
+def test_stream_liveness_reaps_hung_peer():
+    """A ready peer holding in-flight work but silent past
+    liveness_timeout is destroyed (no grace) and its bundles requeue
+    onto the survivor — the run completes in ~liveness time, not the
+    run deadline."""
+    hole, echo = _BlackholePeer(), _EchoPeer()
+    bundles = [_bundle(i) for i in range(4)]
+    t0 = time.monotonic()
+    with _LoopFleet([hole, echo]) as fleet:
+        fold = _fold(fleet, list(bundles), timeout=60.0,
+                     liveness_timeout=0.6)
+    elapsed = time.monotonic() - t0
+    assert fold.n_done == 4                      # nothing lost
+    assert hole.swallowed and hole.destroyed     # it really ate work
+    assert fleet.hung_reaped == 1
+    rec = fleet.last_recovery
+    assert rec["hung_reaped"] == 1
+    assert rec["requeued"] >= 1
+    assert rec["lost_replay_s"] > 0.0
+    assert elapsed < 30.0                        # liveness, not deadline
+    # totals match an all-healthy fleet bit for bit
+    with _LoopFleet([_EchoPeer()]) as clean:
+        ref = _fold(clean, list(bundles))
+    assert fold.totals == ref.totals
+
+
+def test_stream_max_attempts_is_configurable():
+    """Satellite: the attempt budget is a knob, not a constant.  A peer
+    whose worker dies on every dispatch exhausts exactly max_attempts
+    dispatches before the bundle is declared poison."""
+    peer = _RetryPeer()
+    with _LoopFleet([peer]) as fleet:
+        with pytest.raises(RuntimeError, match="poison"):
+            _fold(fleet, [_bundle(0)], timeout=30.0, max_attempts=2)
+    assert peer.dispatches == 2                  # budget exactly honored
+    peer2 = _RetryPeer()
+    with _LoopFleet([peer2]) as fleet:
+        with pytest.raises(RuntimeError, match="poison"):
+            _fold(fleet, [_bundle(0)], timeout=30.0, max_attempts=1)
+    assert peer2.dispatches == 1
+    with pytest.raises(ValueError, match="max_attempts"):
+        with _LoopFleet([_EchoPeer()]) as fleet:
+            list(fleet.stream([_bundle(0)], max_attempts=0))
+
+
+def test_stream_on_failure_skip_completes_degraded():
+    """on_failure='skip': failing bundles become holes, the rest of the
+    stream drains, the fold advances past the holes in index order, and
+    the skip list lands in last_recovery."""
+    peer = _FailPeer(bad={1, 3})
+    bundles = [_bundle(i) for i in range(6)]
+    with _LoopFleet([peer]) as fleet:
+        fold = _fold(fleet, list(bundles), on_failure="skip")
+    assert fold.n_done == 4 and fold.n_skipped == 2
+    assert [r.command for r in fold.reports] == ["b0", "b2", "b4", "b5"]
+    assert fleet.last_recovery["skipped"] == [1, 3]
+    # bit-identical to folding only the surviving bundles in order
+    ref = ReportFold()
+    for i in (0, 2, 4, 5):
+        ref.add(i, _EchoPeer._report(bundles[i]))
+        ref.skip(i + 1) if i in (0, 2) else None
+    assert fold.totals == ref.totals
+    # exhausted attempt budgets skip the same way (retry-forever peer)
+    retry = _RetryPeer()
+    with _LoopFleet([retry, _EchoPeer()]) as fleet:
+        fold2 = _fold(fleet, [_bundle(9)], timeout=30.0, max_attempts=1,
+                      on_failure="skip")
+    assert fold2.n_done + fold2.n_skipped == 1
+    # the same failure under the default raises
+    with _LoopFleet([_FailPeer(bad={0})]) as fleet:
+        with pytest.raises(RuntimeError, match="injected failure"):
+            _fold(fleet, [_bundle(0)])
+
+
+def test_stream_speculation_first_result_wins():
+    """speculate: with the queue drained and a median established, a
+    straggling bundle is re-dispatched to a free peer; the twin's result
+    completes it and accounting records the speculative win."""
+    hole, echo = _BlackholePeer(), _EchoPeer()
+    bundles = [_bundle(i) for i in range(6)]
+    with _LoopFleet([hole, echo]) as fleet:
+        fold = _fold(fleet, list(bundles), timeout=30.0, speculate=1.5)
+    assert fold.n_done == 6                      # the straggler completed
+    assert hole.swallowed                        # it really held bundles
+    rec = fleet.last_recovery
+    assert rec["speculative_dispatches"] >= 1
+    assert rec["speculative_wins"] >= 1
+    with _LoopFleet([_EchoPeer()]) as clean:
+        ref = _fold(clean, list(bundles))
+    assert fold.totals == ref.totals             # bit-identical
+    with pytest.raises(ValueError, match="speculate"):
+        with _LoopFleet([_EchoPeer()]) as fleet:
+            list(fleet.stream([_bundle(0)], speculate=0.5))
+
+
+def test_warmup_death_is_reaped_without_touching_pending():
+    """Satellite: a peer dying during warmup() is reaped cleanly — the
+    pool keeps its survivors, no pending work is fabricated or lost, and
+    the next stream serves normally."""
+    dying, echo = _DyingPeer(), _EchoPeer()
+    with _LoopFleet([dying, echo]) as fleet:
+        fleet.warmup(timeout=10.0)
+        assert fleet.worker_deaths == 1
+        assert fleet._peers == [echo]
+        fold = _fold(fleet, [_bundle(i) for i in range(3)])
+    assert fold.n_done == 3
+    assert fleet.last_recovery["worker_deaths"] == 0   # none mid-stream
+
+
+def test_retry_accounting_exact_under_autoscale():
+    """Satellite: agent-style ('retry', ...) replies requeue without
+    double-charging — under an autoscaling pool every bundle still
+    completes exactly once, the requeue count matches the retry count,
+    and totals stay bit-identical to a healthy fixed pool."""
+    bundles = [_bundle(i) for i in range(10)]
+    flaky = _FlakyPeer()
+    with _LoopFleet([flaky], autoscale=True, scale_max=3) as fleet:
+        fold = _fold(fleet, iter(bundles), timeout=30.0, window=4)
+        assert fleet.scale_ups >= 1              # it really grew
+    assert fold.n_done == 10
+    rec = fleet.last_recovery
+    assert rec["requeued"] == len(flaky._seen)   # one requeue per retry
+    assert rec["skipped"] == []
+    assert rec["requeue_latency_s"] >= 0.0
+    with _LoopFleet([_EchoPeer(), _EchoPeer(), _EchoPeer()]) as clean:
+        ref = _fold(clean, list(bundles))
+    assert fold.totals == ref.totals             # bit-identical
+    # a retry keeps its attempt charged: with max_attempts=1 the same
+    # flake is poison on the re-dispatch check
+    with _LoopFleet([_FlakyPeer()]) as fleet:
+        with pytest.raises(RuntimeError, match="poison"):
+            _fold(fleet, [_bundle(0)], timeout=30.0, max_attempts=1)
+
+
+def test_report_fold_skip_advances_past_holes():
+    fold = ReportFold()
+    rep = _EchoPeer._report(_bundle(1))
+    fold.skip(0)
+    fold.add(1, rep)
+    fold.add(3, _EchoPeer._report(_bundle(3)))
+    assert fold.n_done == 1                      # 3 buffered behind hole 2
+    fold.skip(2)
+    assert fold.n_done == 2 and fold.n_skipped == 2
+    assert [r.command for r in fold.reports] == ["b1", "b3"]
+
+
+def test_fleet_config_robustness_knobs_validate_and_pickle():
+    pol = ChaosPolicy(seed=3, kill_every=5, max_faults=1)
+    cfg = FleetConfig.process(max_workers=2, chaos=pol,
+                              liveness_timeout=2.0, speculate=2.0,
+                              on_failure="skip", max_attempts=5,
+                              max_respawns=8)
+    assert pickle.loads(pickle.dumps(cfg)) == cfg
+    assert cfg.chaos == pol and cfg.max_attempts == 5
+    rcfg = FleetConfig.remote(["h:1"], chaos=pol, liveness_timeout=1.0)
+    assert rcfg.chaos == pol
+    with pytest.raises(ValueError, match="max_attempts"):
+        FleetConfig.thread(max_attempts=0)
+    with pytest.raises(ValueError, match="on_failure"):
+        FleetConfig.thread(on_failure="shrug")
+    with pytest.raises(ValueError, match="liveness_timeout"):
+        FleetConfig.process(liveness_timeout=0.0)
+    with pytest.raises(ValueError, match="speculate"):
+        FleetConfig.process(speculate=0.9)
+    # thread workers have no peer to kill/heartbeat/re-dispatch against
+    for bad in (dict(chaos=pol), dict(liveness_timeout=1.0),
+                dict(speculate=2.0)):
+        with pytest.raises(ValueError, match="process"):
+            FleetConfig(executor="thread", **bad)
+    # respawn budgets are a local-pool concept
+    with pytest.raises(ValueError, match="max_respawns"):
+        FleetConfig.remote(["h:1"]).__class__(
+            executor="remote", hosts=("h:1",), max_respawns=2)
+
+
+def test_thread_executor_on_failure_skip():
+    """Degraded completion on the thread path: a profile that raises
+    mid-replay becomes a recovery['skipped'] hole, not a failed run."""
+    em = _em()
+    good = [_profile([_rv(flops=FPI * (i + 1))], command=f"t{i}")
+            for i in range(4)]
+    # fails inside the pool thread (resources=None breaks compile), not in
+    # the admission loop — that is the hole skip-mode must tolerate
+    bad = SynapseProfile(command="boom",
+                         samples=[Sample(index=0, resources=None)])
+    out = em.emulate_many(good[:2] + [bad] + good[2:],
+                          config=FleetConfig.thread(max_workers=2,
+                                                    on_failure="skip"))
+    assert out.n_replayed == 4
+    assert out.recovery["skipped"] == [2]
+    ref = em.emulate_many(good, config=FleetConfig.thread(max_workers=1))
+    assert out.totals == ref.totals              # holes don't change bits
+    with pytest.raises(Exception):
+        em.emulate_many(good[:1] + [bad],
+                        config=FleetConfig.thread(max_workers=1))
+
+
+# ---------------------------------------------------------------------------
+# real workers (spawns subprocesses)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.subproc
+def test_chaos_kill_schedule_reproducible_on_process_fleet():
+    """The tentpole acceptance contract: a seeded kill schedule produces
+    the same deaths/requeues run after run, and fault-injected streamed
+    totals stay bit-identical to a fault-free replay."""
+    from repro.fleet.executor import run_process_fleet
+    em = _em()
+    profs = [_profile([_rv(flops=FPI * (i + 1), hbm=BPI)],
+                      command=f"chaos{i}") for i in range(6)]
+    clean = em.emulate_many(profs, config=FleetConfig.process(max_workers=1),
+                            collect="totals")
+    # one worker => a deterministic dispatch order => exact fault ordinals:
+    # worker:0 dies on its 3rd dispatch, its replacement worker:1 dies on
+    # ITS 3rd, worker:2 drains the rest.  Same schedule every run.
+    pol = ChaosPolicy(seed=5, kill_every=3, max_faults=1)
+    outs = []
+    for _ in range(2):
+        out = run_process_fleet(em, profs, max_workers=1, chaos=pol,
+                                max_respawns=4, collect="totals",
+                                timeout=300.0)
+        outs.append(out)
+    for out in outs:
+        assert out.n_replayed == 6
+        assert out.totals == clean.totals        # bit-identical under chaos
+        assert out.recovery["worker_deaths"] == 2
+        assert out.recovery["requeued"] == 2
+        assert out.recovery["skipped"] == []
+        assert out.recovery["lost_replay_s"] > 0.0
+        assert out.recovery["mttr_s"] is not None   # refills were measured
+        assert out.cache_stats["respawns"] == 2
+    assert outs[0].recovery["worker_deaths"] == \
+        outs[1].recovery["worker_deaths"]
+
+
+@pytest.mark.slow
+@pytest.mark.subproc
+def test_chaos_hung_worker_reaped_by_liveness():
+    """A worker that goes silent with its pipe open (heartbeats paused)
+    is reaped within ~liveness_timeout and its bundle requeued — the run
+    completes far inside the 600s deadline instead of stalling on the
+    hang."""
+    em = _em()
+    profs = [_profile([_rv(flops=FPI, hbm=BPI)], command=f"hang{i}")
+             for i in range(4)]
+    clean = em.emulate_many(profs, config=FleetConfig.process(max_workers=2),
+                            collect="totals")
+    pol = ChaosPolicy(seed=9, hang_nth=2, max_faults=1)   # hang_s: 1 hour
+    t0 = time.monotonic()
+    out = em.emulate_many(
+        profs, config=FleetConfig.process(max_workers=2, chaos=pol,
+                                          liveness_timeout=2.0),
+        collect="totals")
+    elapsed = time.monotonic() - t0
+    assert out.n_replayed == 4
+    assert out.totals == clean.totals            # bit-identical under chaos
+    assert out.recovery["hung_reaped"] >= 1      # liveness saw the hang
+    assert out.recovery["requeued"] >= 1
+    assert out.recovery["heartbeats"] > 0        # pings really flowed
+    assert elapsed < 300.0                       # nowhere near hang_s/deadline
+
+
+@pytest.mark.slow
+@pytest.mark.subproc
+def test_crash_loop_breaker_trips_instead_of_burning_budget():
+    """A spec that dies before initialization trips CrashLoopError after
+    crash_loop deaths — the remaining respawn budget is preserved, not
+    silently burned."""
+    em = _em()
+    spec = WorkerSpec(emulator=em.spec(),
+                      chaos=ChaosPolicy(kill_on_init=True))
+    fleet = ProcessFleet(1, spec, max_respawns=20,
+                         respawn_backoff=(0.05, 0.2), crash_loop=(3, 30.0))
+    try:
+        with pytest.raises(CrashLoopError, match="crash-looping"):
+            fleet.warmup(timeout=120.0)
+        assert fleet.respawns < 20               # budget NOT exhausted
+        assert fleet.worker_deaths == 3          # breaker limit exactly
+    finally:
+        fleet.close()
+
+
+@pytest.mark.slow
+@pytest.mark.subproc
+def test_chaos_schedule_reproduces_over_remote_loopback():
+    """Transport parity: the same seeded policy drives the same worker
+    fault schedule through a TCP agent — the agent's local worker dies
+    on schedule, the bundle comes back as a retry, and totals stay
+    bit-identical to a clean replay."""
+    import os
+    import subprocess
+    import sys
+
+    from repro.fleet import RemoteFleet
+    from repro.fleet.transport.remote import run_remote_fleet
+
+    em = _em()
+    profs = [_profile([_rv(flops=FPI * (i + 1), hbm=BPI)],
+                      command=f"rchaos{i}") for i in range(6)]
+    refs = [em.emulate(p, fused=True) for p in profs]
+    em.storage.cleanup()
+    # 1 agent x 1 worker: worker:0 serves 3 bundles and dies on its 4th
+    # dispatch; the agent respawns worker:1 (inside its default budget),
+    # which drains the remaining 3.  One death, one requeue — exactly.
+    pol = ChaosPolicy(seed=2, kill_every=4, max_faults=1)
+    fleet = RemoteFleet(WorkerSpec(emulator=em.spec(), chaos=pol),
+                        listen="127.0.0.1:0", agents=1)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.fleet.agent",
+         "--connect", f"127.0.0.1:{fleet.bound_addr[1]}", "--workers", "1"],
+        env=env)
+    try:
+        out = run_remote_fleet(em, profs, fleet=fleet, timeout=300.0)
+    finally:
+        fleet.close()
+        try:
+            proc.wait(timeout=30.0)
+        except subprocess.TimeoutExpired:
+            proc.kill()
+            proc.wait(timeout=10.0)
+    assert out.n_replayed == 6
+    for ref, rep in zip(refs, out.reports):
+        assert rep.consumed == ref.consumed      # bit-identical under chaos
+    assert out.recovery["requeued"] == 1         # the scheduled death
+    assert out.recovery["worker_deaths"] == 0    # the AGENT never died
+    assert out.recovery["skipped"] == []
