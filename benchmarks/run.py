@@ -20,7 +20,7 @@ def main() -> None:
                             bench_emulation_same_host, bench_fleet,
                             bench_profiling_consistency,
                             bench_profiling_overhead, bench_roofline,
-                            bench_scenarios)
+                            bench_scenarios, bench_service)
     suite = [
         ("atoms", bench_atoms.main),
         ("dispatch", bench_dispatch.main),
@@ -35,6 +35,7 @@ def main() -> None:
         # `--only fleet` doesn't drag the soak/chaos legs along
         ("soak", bench_fleet.soak),
         ("chaos", bench_fleet.chaos),
+        ("service", bench_service.main),
     ]
     for name, fn in suite:
         if args.only and args.only not in name:

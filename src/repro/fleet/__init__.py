@@ -79,6 +79,24 @@ Thread vs process vs remote executor — decision matrix:
                       raising profile,      per-fault recovery    over TCP
                       keeps the rest        cost in FleetReport
                                             .recovery
+  open-loop           no (batch replay      YES: StandingFleet    YES: the same serve
+  arrivals?           only: dispatch is     (repro.service)       loop over a warm
+                      driven by the         holds the pool warm   agent pool; arrivals
+                      source iterator,      and admits bundles    admit at arrival
+                      not a clock)          at arrival time —     time across TCP
+                                            seeded Poisson/
+                                            diurnal/trace load
+                                            independent of
+                                            drain rate
+  SLO accounting?     no (FleetReport       YES: repro.service    YES: same engine —
+                      totals only)          .slo streams p50/     latency timeline and
+                                            p99/p999 through a    fault windows are
+                                            bounded sketch,       transport-agnostic
+                                            counts per-window     monotonic stamps
+                                            violations, joins
+                                            chaos MTTR windows
+                                            into the latency
+                                            timeline
   best for            small fleets, tiny    large fleets,         fleets bigger than one
                       profiles, tests       collective legs,      machine; real TPU
                                             saturating a host     hosts joining later
@@ -111,9 +129,10 @@ DeprecationWarning.  Migrating is mechanical::
 """
 from repro.fleet.bundle import (MeshSpec, ScheduleBundle,  # noqa: F401
                                 WorkerSpec, bundle_profile)
-from repro.fleet.chaos import ChaosPolicy  # noqa: F401
+from repro.fleet.chaos import ChaosPolicy, derive_seed  # noqa: F401
 from repro.fleet.config import (UNSET, FleetConfig)  # noqa: F401
-from repro.fleet.executor import (CrashLoopError,  # noqa: F401
+from repro.fleet.executor import (BundleTiming,  # noqa: F401
+                                  CrashLoopError,
                                   FleetBase, Peer, PeerGone,
                                   ProcessFleet, run_process_fleet)
 from repro.fleet.transport.remote import (RemoteFleet,  # noqa: F401

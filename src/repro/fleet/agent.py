@@ -109,10 +109,14 @@ def serve(sock: socket.socket, n_workers: int) -> int:
     heartbeat_s = getattr(spec, "heartbeat_s", 0.0) or 0.0
     if heartbeat_s > 0:
         def _beat():
-            while not hb_stop.wait(heartbeat_s):
+            # first beat fires immediately (same contract as the process
+            # worker's sender): even a short-lived agent registers a pulse
+            while True:
                 try:
                     send(("ping",))
                 except (framing.TransportError, OSError):
+                    return
+                if hb_stop.wait(heartbeat_s):
                     return
         threading.Thread(target=_beat, daemon=True,
                          name="agent-heartbeat").start()

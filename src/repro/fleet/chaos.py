@@ -60,11 +60,19 @@ from typing import List, Optional, Tuple, Union
 Action = Union[str, Tuple[str, float]]
 
 
-def _derive_seed(seed: int, scope: str) -> int:
+def derive_seed(seed: int, scope: str) -> int:
     """Stable per-scope RNG seed: must agree across processes and runs
-    (``hash()`` is salted per interpreter, so sha256 it is)."""
+    (``hash()`` is salted per interpreter, so sha256 it is).  Public
+    because it is the repo-wide seeding discipline — ``ChaosPolicy``
+    scopes its fault streams with it and ``repro.service.arrivals``
+    scopes its arrival streams with it, so a chaos-under-load run is
+    reproducible end to end from two integers."""
     digest = hashlib.sha256(f"{seed}:{scope}".encode()).digest()
     return int.from_bytes(digest[:8], "big")
+
+
+#: backwards-compatible alias (pre-service name)
+_derive_seed = derive_seed
 
 
 @dataclass(frozen=True)

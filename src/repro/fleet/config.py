@@ -177,6 +177,42 @@ class FleetConfig:
         """Effective autoscale floor."""
         return self.min_workers if self.min_workers is not None else 1
 
+    # -- fleet construction (the service's standing pool uses these) --------
+
+    def worker_spec(self, emulator_spec) -> "WorkerSpec":
+        """Build the ``WorkerSpec`` this config implies for one worker:
+        the emulator's picklable recipe (``Emulator.spec()``), the
+        per-worker mesh, the chaos policy, and a heartbeat cadence derived
+        from ``liveness_timeout`` (4 beats per window, floored at 100ms)
+        exactly like ``run_process_fleet`` does."""
+        from repro.fleet.bundle import WorkerSpec
+        heartbeat = 0.0
+        if self.liveness_timeout is not None:
+            heartbeat = max(0.1, self.liveness_timeout / 4.0)
+        return WorkerSpec(emulator=emulator_spec, mesh=self.mesh_spec,
+                          heartbeat_s=heartbeat, chaos=self.chaos)
+
+    def build(self, spec: "WorkerSpec"):
+        """Construct the live pool (``ProcessFleet`` / ``RemoteFleet``)
+        this config describes.  Only those two executors *have* a standing
+        pool to build — the thread path replays in-process and raises
+        here.  The caller owns the returned fleet's lifecycle."""
+        if self.executor == "process":
+            from repro.fleet.executor import ProcessFleet
+            return ProcessFleet(self.max_workers, spec,
+                                autoscale=self.autoscale,
+                                min_workers=self.min_workers,
+                                max_respawns=self.max_respawns)
+        if self.executor == "remote":
+            from repro.fleet.transport.remote import RemoteFleet
+            return RemoteFleet(spec, hosts=self.hosts, listen=self.listen,
+                               agents=self.agents,
+                               autoscale=self.autoscale,
+                               min_workers=self.min_workers)
+        raise ValueError(
+            "only executor='process' or 'remote' can build a standing "
+            f"worker pool; executor={self.executor!r} replays in-process")
+
     # -- constructors (each exposes only its executor's knobs) --------------
 
     @classmethod

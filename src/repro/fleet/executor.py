@@ -69,8 +69,9 @@ import time
 from collections import deque
 from multiprocessing import connection as mp_conn
 from random import Random
-from typing import (Deque, Dict, Iterable, Iterator, List, Optional, Set,
-                    Tuple)
+from dataclasses import dataclass
+from typing import (Callable, Deque, Dict, Iterable, Iterator, List,
+                    Optional, Set, Tuple)
 
 from repro.core.emulator import (EmulationReport, Emulator, FleetReport,
                                  ReportFold)
@@ -90,6 +91,26 @@ class CrashLoopError(RuntimeError):
     """A peer spec is dying repeatedly within the crash-loop window: the
     spec (not the luck) is the problem — stop respawning and say so
     loudly instead of exhausting ``max_respawns`` in silence."""
+
+
+@dataclass(frozen=True)
+class BundleTiming:
+    """Per-bundle lifecycle stamps from one ``stream`` (``time.monotonic``
+    clock).  ``queue_s`` is the *total* time the bundle sat in the pending
+    queue — its initial wait plus every post-fault requeue wait — while
+    ``replay_s`` is measured from the *last* dispatch only, so a chaos
+    requeue never inflates the replay figure (the queueing-delay metric a
+    serving layer builds on this stays honest under faults).  A skipped
+    bundle reports ``ok=False`` with ``replay_s=0.0``; ``dispatched`` is
+    ``None`` when the bundle never reached a worker."""
+
+    enqueued: float             # admitted into the pending queue
+    dispatched: Optional[float]  # last handed to a worker (None: never)
+    done: float                 # result yielded (or bundle skipped)
+    queue_s: float              # total pending-queue residency
+    replay_s: float             # done - last dispatch (0.0 if skipped)
+    attempts: int               # dispatch attempts consumed
+    ok: bool                    # False: skipped under on_failure="skip"
 
 
 class Peer:
@@ -202,6 +223,10 @@ class FleetBase:
         #: scale-up races an outstanding respawn, exact otherwise)
         self._fault_opened: Deque[float] = deque()
         self._mttr_samples: List[float] = []
+        #: closed fault windows as ``(opened, repaired)`` monotonic stamps
+        #: — the joinable form of ``_mttr_samples`` (the SLO engine lines
+        #: these up against the latency timeline for chaos attribution)
+        self.fault_events: List[Tuple[float, float]] = []
 
     # -- pool plumbing ------------------------------------------------------
 
@@ -238,8 +263,10 @@ class FleetBase:
         """A peer reported ready: close the oldest open fault's MTTR
         window, if a refill was outstanding."""
         if self._fault_opened:
-            self._mttr_samples.append(
-                time.monotonic() - self._fault_opened.popleft())
+            opened = self._fault_opened.popleft()
+            now = time.monotonic()
+            self._mttr_samples.append(now - opened)
+            self.fault_events.append((opened, now))
 
     def _scale_up(self) -> bool:
         """Hook: add one peer of capacity (autoscale).  Returns True if the
@@ -327,7 +354,10 @@ class FleetBase:
                max_attempts: Optional[int] = None,
                liveness_timeout: Optional[float] = None,
                speculate: Optional[float] = None,
-               on_failure: str = "raise"
+               on_failure: str = "raise",
+               record_timing: Optional[
+                   Callable[[int, BundleTiming], None]] = None,
+               idle_retire_s: Optional[float] = None
                ) -> Iterator[Tuple[int, EmulationReport]]:
         """Replay a (possibly lazy) bundle source; yields ``(idx, report)``
         pairs in completion order.
@@ -340,6 +370,14 @@ class FleetBase:
         tracks the pool at ``2 × worker slots`` (recomputed as the pool
         scales), keeping every slot fed while leaving queue depth visible
         to the autoscaler.
+
+        *Arrival-time admission*: the source may yield ``None`` to say
+        "nothing available right now" — the scheduler stops admitting for
+        this pass but keeps dispatching/collecting, and asks again on the
+        next pass.  That turns a pre-built iterator contract into an
+        open-loop one: a standing serve loop backed by a live queue
+        (``repro.service.standing``) yields ``None`` while the queue is
+        empty and raises ``StopIteration`` only on drain/close.
 
         Hardening knobs:
 
@@ -361,6 +399,20 @@ class FleetBase:
           announced as ``(idx, None)`` so a consumer folding in index
           order can advance past the hole promptly (and is recorded in
           ``last_recovery["skipped"]``).
+        * ``record_timing`` — callback invoked once per bundle (just
+          before its result is yielded, or when it is skipped) with
+          ``(idx, BundleTiming)``: separate enqueue/dispatch/done stamps
+          plus honest queue-vs-replay split (a post-fault requeue charges
+          queue time, never replay time).
+        * ``idle_retire_s`` — autoscale only: when the pending queue
+          stays below the pool floor (``min_workers``) for this long
+          mid-stream, one idle worker is retired per elapsed window (the
+          pool never drops below the floor).  Defaults to
+          ``liveness_timeout`` when armed, so "a full liveness window of
+          low queue depth" is the retire signal; with neither set,
+          mid-stream scale-down is off and only the drain-time retire
+          runs.  Retires are counted in ``last_scaling`` under both
+          ``scale_downs`` and ``midstream_downs``.
 
         Raises RuntimeError on a peer-reported replay failure or poison
         bundle (under ``on_failure="raise"``), ``CrashLoopError`` when
@@ -401,10 +453,19 @@ class FleetBase:
         base_ups, base_downs = self.scale_ups, self.scale_downs
         base_deaths, base_hung = self.worker_deaths, self.hung_reaped
         base_mttr = len(self._mttr_samples)
+        base_fev = len(self.fault_events)
         peak_workers = peak_queue = peak_window = 0
+        midstream_downs = 0
+        low_q_since: Optional[float] = None  # dwell timer for idle retire
+        retire_s = idle_retire_s if idle_retire_s is not None \
+            else liveness_timeout
         # -- recovery accounting (this stream only) --------------------------
         disp_at: Dict[int, float] = {}       # idx -> latest dispatch time
         requeue_ts: Dict[int, float] = {}    # idx -> when it re-entered pending
+        # -- per-bundle lifecycle stamps (BundleTiming) ----------------------
+        enq_at: Dict[int, float] = {}        # idx -> admission time
+        q_since: Dict[int, float] = {}       # idx -> entered pending (latest)
+        q_wait: Dict[int, float] = {}        # idx -> accumulated queue time
         done_times: List[float] = []         # dispatch->ok latencies
         skipped: List[int] = []
         requeued = 0
@@ -427,29 +488,50 @@ class FleetBase:
                     if t is not None:
                         lost_replay += now - t
                     requeue_ts[i] = now
+                    q_since[i] = now        # back in the queue: the clock
+                    # charges queue time again, never replay time
 
         def skip(idx: int) -> None:
+            now = time.monotonic()
             skipped.append(idx)
             held.pop(idx, None)
-            attempts.pop(idx, None)
-            disp_at.pop(idx, None)
+            att = attempts.pop(idx, None)
+            t = disp_at.pop(idx, None)
             spec_extra.discard(idx)
             spec_peer.pop(idx, None)
+            requeue_ts.pop(idx, None)
+            qw = q_wait.pop(idx, 0.0)
+            qs = q_since.pop(idx, None)
+            if qs is not None:              # skipped while still queued
+                qw += now - qs
+            enq = enq_at.pop(idx, now)
+            if record_timing is not None:
+                record_timing(idx, BundleTiming(
+                    enqueued=enq, dispatched=t, done=now, queue_s=qw,
+                    replay_s=0.0, attempts=att or 0, ok=False))
 
         try:
             while True:
                 # -- admission: compile-ahead at most `window` bundles ----
                 cap = sum(p.capacity for p in self._peers) or 1
                 win = window if window is not None else max(2 * cap, 2)
+                saw_none = False
                 while not exhausted and len(held) < win:
                     try:
                         b = next(source)
                     except StopIteration:
                         exhausted = True
                         break
+                    if b is None:
+                        # open-loop source: nothing has arrived yet — stop
+                        # admitting this pass, keep the scheduler turning
+                        saw_none = True
+                        break
+                    now = time.monotonic()
                     held[next_idx] = b
                     pending.append(next_idx)
                     attempts[next_idx] = 0
+                    enq_at[next_idx] = q_since[next_idx] = now
                     next_idx += 1
                 if exhausted and not held:
                     break
@@ -501,17 +583,42 @@ class FleetBase:
                         if t is not None:
                             requeue_wait += now - t
                             requeue_waits += 1
+                        qs = q_since.pop(idx, None)
+                        if qs is not None:
+                            q_wait[idx] = q_wait.get(idx, 0.0) + (now - qs)
                 # -- elasticity: queue depth drives the pool size ---------
                 if self._autoscale:
                     if pending and not any(p.alive and p.free_slots > 0
                                            for p in self._peers):
                         self._scale_up()
+                        low_q_since = None
                     elif exhausted and not pending:
                         # long tail: peers that already drained go idle
                         # while stragglers finish — release them early
                         idle = [p for p in self._peers if not p.tasks]
                         for p in idle[:len(self._peers) - self._scale_min]:
                             self._retire(p)
+                    elif retire_s is not None \
+                            and len(pending) < self._scale_min \
+                            and len(self._peers) > self._scale_min:
+                        # mid-stream scale-down: queue depth has stayed
+                        # below the pool floor for a full window — a
+                        # standing fleet between load peaks sheds one idle
+                        # worker per elapsed window instead of holding its
+                        # storm-sized pool until drain
+                        now_e = time.monotonic()
+                        if low_q_since is None:
+                            low_q_since = now_e
+                        elif now_e - low_q_since >= retire_s:
+                            victim = next(
+                                (p for p in self._peers
+                                 if p.ready and not p.tasks), None)
+                            if victim is not None:
+                                self._retire(victim)
+                                midstream_downs += 1
+                            low_q_since = now_e
+                    else:
+                        low_q_since = None
                 peak_workers = max(peak_workers,
                                    sum(p.capacity for p in self._peers))
                 # -- liveness: reap hung-but-connected peers --------------
@@ -563,7 +670,10 @@ class FleetBase:
                         f"all fleet workers died ({self.worker_deaths} "
                         f"death(s)) with {len(held)} bundle(s) pending")
                 # -- collect ----------------------------------------------
-                evs = self._wait(0.5)
+                # an open-loop pass (source had nothing *yet*) polls fast:
+                # the next arrival should not sit in its feed queue for a
+                # full peer-wait interval before admission
+                evs = self._wait(0.02 if saw_none else 0.5)
                 if not evs and not self._peers:
                     time.sleep(0.05)   # backoff respawn still pending
                 for obj in evs:
@@ -597,7 +707,17 @@ class FleetBase:
                                 spec_wins += 1
                             spec_extra.discard(idx)
                             del held[idx]
-                            attempts.pop(idx, None)
+                            att = attempts.pop(idx, None)
+                            q_since.pop(idx, None)
+                            qw = q_wait.pop(idx, 0.0)
+                            enq = enq_at.pop(idx, now)
+                            if record_timing is not None:
+                                record_timing(idx, BundleTiming(
+                                    enqueued=enq, dispatched=t, done=now,
+                                    queue_s=qw,
+                                    replay_s=(max(0.0, now - t)
+                                              if t is not None else 0.0),
+                                    attempts=att or 1, ok=True))
                             yield idx, rep
                     elif kind == "retry":
                         _, e, idx, _reason = msg
@@ -609,6 +729,7 @@ class FleetBase:
                             if t is not None:
                                 lost_replay += now - t
                             requeue_ts[idx] = now
+                            q_since[idx] = now
                             pending.append(idx)
                     elif kind == "err":
                         _, e, idx, tb = msg
@@ -638,6 +759,7 @@ class FleetBase:
                 "peak_workers": peak_workers,
                 "peak_queue_depth": peak_queue,
                 "peak_window": peak_window,
+                "midstream_downs": midstream_downs,
             }
             mttr = self._mttr_samples[base_mttr:]
             self.last_recovery = {
@@ -652,6 +774,11 @@ class FleetBase:
                 "speculative_dispatches": spec_dispatches,
                 "speculative_wins": spec_wins,
                 "heartbeats": pings,
+                # (opened, repaired) monotonic stamps of every fault whose
+                # MTTR window closed during this stream — joinable against
+                # a latency timeline (repro.service.slo does exactly that)
+                "fault_events": [
+                    (o, r) for o, r in self.fault_events[base_fev:]],
             }
 
     def run(self, bundles: Iterable[ScheduleBundle], *,

@@ -106,12 +106,15 @@ def worker_loop(conn, spec, scope: str = "worker:0") -> None:
     heartbeat_s = getattr(spec, "heartbeat_s", 0.0)
     if heartbeat_s and heartbeat_s > 0:
         def _beat():
-            while not hb_stop.wait(heartbeat_s):
-                if hb_pause.is_set():
-                    continue          # hung workers don't heartbeat
-                try:
-                    send(("ping",))
-                except (BrokenPipeError, OSError):
+            # first beat fires immediately: a worker whose whole useful
+            # life fits inside one interval still registers a pulse
+            while True:
+                if not hb_pause.is_set():  # hung workers don't heartbeat
+                    try:
+                        send(("ping",))
+                    except (BrokenPipeError, OSError):
+                        return
+                if hb_stop.wait(heartbeat_s):
                     return
         threading.Thread(target=_beat, daemon=True,
                          name="fleet-heartbeat").start()

@@ -6,6 +6,7 @@
         --executor process --workers 2 --mesh 2
     python -m repro.scenarios fleet --store runs/ --from-store scenario=x \
         --executor remote --host host1:9000 --host host2:9000
+    python -m repro.scenarios serve --port 8787
 
 ``list`` shows every registered generator with its defaults; ``run`` pushes
 one scenario through generate -> predict -> emulate (-> store with
@@ -17,6 +18,9 @@ dials listening ``python -m repro.fleet.agent`` processes; ``--listen`` +
 process an N-device mesh so collective legs execute.  ``--from-store``
 turns ``--store`` into a profile *source*: matching stored profiles are
 streamed into the fleet alongside (or instead of) generated jobs.
+``serve`` starts the live traffic emulation service
+(:mod:`repro.service.http`): open-loop load runs against a standing
+fleet, driven and reported over HTTP.
 """
 from __future__ import annotations
 
@@ -153,6 +157,12 @@ def _cmd_fleet(args) -> int:
     return 0
 
 
+def _cmd_serve(args) -> int:
+    from repro.service.http import serve
+    serve(args.serve_host, args.port)
+    return 0
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.scenarios",
@@ -224,6 +234,13 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "for all) out of --store into the fleet")
     fl.add_argument("--json", action="store_true")
 
+    sv = sub.add_parser("serve",
+                        help="start the live traffic emulation service "
+                             "(open-loop load runs over HTTP)")
+    sv.add_argument("--host", dest="serve_host", default="127.0.0.1")
+    sv.add_argument("--port", type=int, default=8787,
+                    help="0 picks a free port (printed at startup)")
+
     args = ap.parse_args(argv)
     if args.cmd == "fleet":
         if args.mesh and args.executor == "thread":
@@ -256,7 +273,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         if not args.job and args.from_store is None:
             ap.error("nothing to replay: give scenario jobs and/or "
                      "--from-store")
-    return {"list": _cmd_list, "run": _cmd_run, "fleet": _cmd_fleet}[args.cmd](args)
+    return {"list": _cmd_list, "run": _cmd_run, "fleet": _cmd_fleet,
+            "serve": _cmd_serve}[args.cmd](args)
 
 
 if __name__ == "__main__":

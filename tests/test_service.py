@@ -1,0 +1,589 @@
+"""Live traffic emulation service (PR 8 contracts).
+
+Fast tests pin the service's pure pieces in-process: arrival processes
+are bit-deterministic per seed (iterating never mutates, traces
+round-trip), the latency sketch honors its ``growth - 1`` error bound
+and merges associatively, and ``SLOEngine`` joins offered/completed/
+fault streams onto one windowed timeline (with the one-window stretch
+past repair).  The executor's open-loop admission mode and per-bundle
+``BundleTiming`` are pinned on loopback peers (no subprocesses), as is
+``StandingFleet``'s session lifecycle over an injected pool, and the
+HTTP layer's parsing/routing runs without sockets (plus one real
+``ThreadingHTTPServer`` smoke on port 0).
+
+The acceptance test (marked ``slow`` + ``subproc``) is the PR's
+headline contract: a seeded Poisson storm against a 1-worker process
+fleet with a seeded ``ChaosPolicy`` kill is reproducible end to end —
+identical arrival timeline, identical fault schedule, exact request
+totals — and the injected kill's MTTR lands in the faulted windows'
+p999.
+"""
+import json
+import multiprocessing as mp
+import pickle
+import threading
+import time
+import urllib.request
+from random import Random
+
+import pytest
+
+from repro.core import ResourceVector, Sample, SynapseProfile
+from repro.core.emulator import EmulationReport, Emulator, ReportFold
+from repro.fleet import (BundleTiming, ChaosPolicy, FleetBase, FleetConfig,
+                         Peer, ScheduleBundle)
+from repro.service import (ARRIVAL_KINDS, Arrival, ConstantArrivals,
+                           DiurnalArrivals, LatencySketch, PoissonArrivals,
+                           SLO, SLOEngine, StandingFleet, TraceArrivals,
+                           arrival_process, run_load)
+from repro.service.http import LoadService, make_server
+
+TILE = 64                  # 1 compute iter = 2*64^3  = 524288 flops
+BLOCK = 1 << 18            # 1 memory  iter = 2*2^18  = 524288 bytes
+FPI = 2.0 * TILE ** 3
+BPI = 2.0 * BLOCK
+
+
+def _rv(flops=0.0, hbm=0.0):
+    return ResourceVector(flops=flops, hbm_bytes=hbm)
+
+
+# ---------------------------------------------------------------------------
+# latency sketch
+# ---------------------------------------------------------------------------
+
+def _exact_quantile(xs, q):
+    s = sorted(xs)
+    import math
+    return s[max(1, math.ceil(q * len(s))) - 1]
+
+
+def test_sketch_error_bound_vs_exact():
+    """Every quantile read back is within ``growth - 1`` relative error
+    of the exact sample quantile (the rank's value lies in the bucket
+    the query lands in, and the midpoint is < sqrt(growth) off)."""
+    rng = Random(42)
+    sk = LatencySketch()
+    xs = [rng.expovariate(1.0 / 0.2) + 1e-4 for _ in range(5000)]
+    for x in xs:
+        sk.add(x)
+    assert sk.count == len(xs)
+    for q in (0.5, 0.9, 0.99, 0.999):
+        exact = _exact_quantile(xs, q)
+        rel = abs(sk.quantile(q) - exact) / exact
+        assert rel <= sk.growth - 1, f"q={q}: rel error {rel:.4f}"
+    # queries clamp to the observed range
+    assert min(xs) <= sk.quantile(0.001) <= max(xs)
+    assert sk.quantile(1.0) == pytest.approx(max(xs), rel=sk.growth - 1)
+    assert sk.mean == pytest.approx(sum(xs) / len(xs))
+
+
+def test_sketch_merge_associative_and_commutative():
+    # dyadic values: float sums are exact, so full equality is fair game
+    def mk(ks):
+        s = LatencySketch()
+        for k in ks:
+            s.add(k / 1024.0)
+        return s
+
+    a, b, c = mk(range(1, 200)), mk(range(50, 400)), mk(range(300, 320))
+    left = a.merge(b).merge(c)
+    right = a.merge(b.merge(c))
+    swapped = c.merge(a).merge(b)
+    for other in (right, swapped):
+        assert left.counts == other.counts
+        assert left.count == other.count
+        assert left.total == other.total
+        assert left.min == other.min and left.max == other.max
+        assert left.quantile(0.99) == other.quantile(0.99)
+    # inputs untouched
+    assert a.count == 199 and c.count == 20
+    with pytest.raises(ValueError):
+        a.merge(LatencySketch(growth=1.1))
+
+
+def test_sketch_pickle_roundtrip():
+    sk = LatencySketch()
+    for i in range(1, 500):
+        sk.add(i / 100.0)
+    back = pickle.loads(pickle.dumps(sk))
+    assert back.counts == sk.counts and back.count == sk.count
+    assert back.quantile(0.99) == sk.quantile(0.99)
+    back.add(7.0)          # still a live sketch, not a frozen snapshot
+    sk.add(7.0)
+    assert back.quantile(0.999) == sk.quantile(0.999)
+
+
+def test_sketch_validation_and_bounded_memory():
+    with pytest.raises(ValueError):
+        LatencySketch(lo=0.0)
+    with pytest.raises(ValueError):
+        LatencySketch(growth=1.0)
+    sk = LatencySketch()
+    with pytest.raises(ValueError):
+        sk.add(-1.0)
+    with pytest.raises(ValueError):
+        sk.quantile(0.0)
+    assert sk.quantile(0.5) == 0.0           # empty sketch
+    n_buckets = len(sk.counts)
+    rng = Random(1)
+    for _ in range(20000):
+        sk.add(rng.random() * 100)
+    assert len(sk.counts) == n_buckets       # bounded regardless of stream
+
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+
+def test_arrivals_same_seed_identical_timeline():
+    def mk(seed):
+        return PoissonArrivals(rate_hz=50.0, n_requests=200,
+                               scenario="svc", seed=seed)
+
+    assert list(mk(7)) == list(mk(7))        # same seed => same timeline
+    p = mk(7)
+    assert list(p) == list(p)                # iterating never mutates
+    assert [a.t for a in mk(8)] != [a.t for a in mk(7)]
+    # gaps strictly positive, times nondecreasing
+    ts = [a.t for a in p]
+    assert all(b > a for a, b in zip(ts, ts[1:]))
+    # the scenario scopes the RNG stream (seeding discipline)
+    other = PoissonArrivals(rate_hz=50.0, n_requests=200,
+                            scenario="other", seed=7)
+    assert [a.t for a in other] != ts
+
+
+def test_constant_arrivals_exact_times_and_bounds():
+    p = ConstantArrivals(rate_hz=4.0, n_requests=9, scenario="svc")
+    assert [a.t for a in p] == [i / 4.0 for i in range(9)]
+    capped = ConstantArrivals(rate_hz=4.0, n_requests=100, duration_s=1.0,
+                              scenario="svc")
+    assert [a.t for a in capped] == [i / 4.0 for i in range(5)]  # t <= 1.0
+    with pytest.raises(ValueError):
+        ConstantArrivals(rate_hz=0.0, n_requests=1)
+    with pytest.raises(ValueError):
+        ConstantArrivals(rate_hz=1.0)        # unbounded load is a typo
+
+
+def test_diurnal_arrivals_shape_and_determinism():
+    p = DiurnalArrivals(base_hz=2.0, peak_hz=40.0, period_s=10.0,
+                        duration_s=10.0, seed=3, scenario="svc")
+    assert p.rate_at(0.0) == pytest.approx(2.0)
+    assert p.rate_at(5.0) == pytest.approx(40.0)
+    ts = [a.t for a in p]
+    assert ts == [a.t for a in p]            # deterministic
+    assert all(b >= a for a, b in zip(ts, ts[1:]))
+    # the mid-period peak carries more arrivals than the edges
+    mid = sum(1 for t in ts if 2.5 <= t < 7.5)
+    edges = len(ts) - mid
+    assert mid > edges
+
+
+def test_trace_roundtrip_and_validation():
+    p = PoissonArrivals(rate_hz=30.0, n_requests=20, scenario="svc",
+                        params={"fanout": 3}, seed=5)
+    tr = p.trace()
+    assert list(tr) == list(p)
+    back = TraceArrivals.from_log(tr.to_log())
+    assert list(back) == list(p)             # JSON form round-trips
+    # bounds still apply on replay
+    cut = TraceArrivals(log=tr.log, n_requests=5)
+    assert len(list(cut)) == 5
+    with pytest.raises(ValueError):
+        TraceArrivals(log=(Arrival(t=1.0, scenario="svc"),
+                           Arrival(t=0.5, scenario="svc")))
+    with pytest.raises(ValueError):
+        Arrival(t=-0.1, scenario="svc")
+
+
+def test_arrival_factory_and_params():
+    p = arrival_process("poisson", "svc", seed=1, n_requests=5, rate_hz=30.0)
+    assert isinstance(p, PoissonArrivals) and p.rate_hz == 30.0
+    with pytest.raises(ValueError):
+        arrival_process("wat", "svc", n_requests=5)
+    assert set(ARRIVAL_KINDS) == {"constant", "poisson", "diurnal"}
+    a = Arrival(t=0.0, scenario="svc", params={"b": 2, "a": 1})
+    assert a.params == (("a", 1), ("b", 2))  # frozen sorted form
+    assert a.kwargs == {"a": 1, "b": 2}
+
+
+# ---------------------------------------------------------------------------
+# SLO engine
+# ---------------------------------------------------------------------------
+
+def test_slo_validation_and_met():
+    slo = SLO(target_ms=200.0, percentile=0.99)
+    assert slo.met(0.2) and not slo.met(0.2001)
+    assert slo.to_dict() == {"target_ms": 200.0, "percentile": 0.99}
+    with pytest.raises(ValueError):
+        SLO(target_ms=0.0)
+    with pytest.raises(ValueError):
+        SLO(target_ms=100.0, percentile=1.0)
+
+
+def test_slo_engine_windows_and_fault_join():
+    eng = SLOEngine(SLO(target_ms=200.0), window_s=1.0)
+    for t in (0.2, 0.4, 1.2, 3.5):
+        eng.offered(t)
+    eng.observe(0.3, 0.05)                   # in SLO
+    eng.observe(1.5, 0.6)                    # violated (600ms)
+    eng.observe(2.1, 0.9, ok=False)          # failed => violated
+    eng.fault(0.5, 1.4)                      # MTTR 0.9s
+    rep = eng.report()
+    assert rep["n_offered"] == 4 and rep["n_completed"] == 3
+    assert rep["n_failed"] == 1 and rep["n_violations"] == 2
+    assert rep["duration_s"] == 4.0          # last window closes the run
+    assert rep["goodput_hz"] == pytest.approx(1 / 4.0)
+    assert rep["offered_hz"] == pytest.approx(4 / 4.0)
+    wins = {w["t0"]: w for w in rep["windows"]}
+    assert set(wins) == {0.0, 1.0, 2.0, 3.0}
+    # the fault marks the windows it overlaps PLUS one past repair (the
+    # interrupted request completes just after the replacement warms)
+    assert wins[0.0]["faults"] == 1
+    assert wins[1.0]["faults"] == 1
+    assert wins[2.0]["faults"] == 1          # repair 1.4 + window 1.0 >= 2.0
+    assert wins[3.0]["faults"] == 0
+    assert wins[2.0]["failed"] == 1 and wins[2.0]["completed"] == 1
+    assert rep["faults"] == [{"opened": 0.5, "repaired": 1.4,
+                              "mttr_s": pytest.approx(0.9)}]
+    # tail reflects the slow completion within sketch error
+    assert rep["p999"] == pytest.approx(0.9, rel=0.05)
+    assert not rep["slo_met"]
+
+
+# ---------------------------------------------------------------------------
+# executor open-loop admission + BundleTiming (loopback peers)
+# ---------------------------------------------------------------------------
+
+class _EchoPeer(Peer):
+    """Loopback peer: ``dispatch`` writes the reply into its own pipe, so
+    the scheduler's wait/collect path runs unchanged with zero
+    subprocesses."""
+
+    def __init__(self):
+        super().__init__()
+        self._r, self._w = mp.Pipe(duplex=False)
+        self.ready = True
+
+    @property
+    def waitable(self):
+        return self._r
+
+    def dispatch(self, epoch, idx, bundle):
+        self.tasks.add((epoch, idx))
+        if bundle.command.startswith("poison"):
+            self._w.send(("err", epoch, idx, "synthetic poison"))
+            return
+        rep = EmulationReport(command=bundle.command, ttc_s=1e-3,
+                              n_samples=bundle.n_profile_samples,
+                              consumed=bundle.planned, mode="fused")
+        self._w.send(("ok", epoch, idx, rep))
+
+    def recv(self):
+        return self._r.recv()
+
+    def close(self):
+        self._r.close()
+        self._w.close()
+
+
+class _EchoFleet(FleetBase):
+    def __init__(self, n, *, autoscale=False, scale_max=3, min_workers=1):
+        super().__init__()
+        self._autoscale = autoscale
+        self._scale_min = min_workers
+        self._scale_max = scale_max
+        for _ in range(n):
+            self._peers.append(_EchoPeer())
+
+    def _scale_up(self):
+        if len(self._peers) >= self._scale_max:
+            return False
+        self._peers.append(_EchoPeer())
+        self.scale_ups += 1
+        return True
+
+
+def _echo_bundle(i, command=None):
+    # awkward float amounts on purpose: summation order changes the bits,
+    # so identical fold totals really mean identical fold order
+    return ScheduleBundle(command=command or f"echo{i}", payload={},
+                          n_profile_samples=1,
+                          planned=_rv(flops=0.1 * i + 0.3, hbm=0.7 * i))
+
+
+def test_stream_none_source_open_loop_admission():
+    """A source yielding ``None`` means "nothing arrived yet": the
+    scheduler keeps turning without marking the stream exhausted, admits
+    each bundle when it appears, and the whole run still drains."""
+    def source():
+        for i in range(4):
+            for _ in range(3):
+                yield None               # idle polls between arrivals
+            yield _echo_bundle(i)
+
+    timings = {}
+    with _EchoFleet(1) as fleet:
+        done = [idx for idx, _ in
+                fleet.stream(source(),
+                             record_timing=lambda i, t: timings.update(
+                                 {i: t}))]
+    assert sorted(done) == [0, 1, 2, 3]
+    assert sorted(timings) == [0, 1, 2, 3]
+    for t in timings.values():
+        assert isinstance(t, BundleTiming) and t.ok
+        assert t.attempts == 1
+        assert t.dispatched is not None
+        assert t.enqueued <= t.dispatched <= t.done
+        assert t.queue_s >= 0.0 and t.replay_s >= 0.0
+
+
+def test_stream_timing_records_skip_as_failure():
+    bundles = [_echo_bundle(0), _echo_bundle(1, command="poison"),
+               _echo_bundle(2)]
+    timings = {}
+    with _EchoFleet(1) as fleet:
+        out = dict(fleet.stream(iter(bundles), on_failure="skip",
+                                record_timing=lambda i, t: timings.update(
+                                    {i: t})))
+    assert out[0] is not None and out[2] is not None
+    assert out[1] is None                    # skipped, not silently lost
+    assert timings[1].ok is False and timings[1].replay_s == 0.0
+    assert timings[0].ok and timings[2].ok
+
+
+def test_stream_midstream_scale_down_on_idle():
+    """An elastic pool sheds idle capacity *between* load peaks: when
+    queue depth stays below the floor for a full ``idle_retire_s``
+    window, one ready idle worker retires per elapsed window (never
+    below the floor)."""
+    def source():
+        for i in range(3):                   # a small burst...
+            yield _echo_bundle(i)
+        t0 = time.monotonic()
+        while time.monotonic() - t0 < 0.4:   # ...then a lull
+            yield None
+        yield _echo_bundle(3)                # traffic resumes
+
+    with _EchoFleet(3, autoscale=True, scale_max=3) as fleet:
+        done = [idx for idx, _ in
+                fleet.stream(source(), idle_retire_s=0.05)]
+        sc = fleet.last_scaling
+        assert sorted(done) == [0, 1, 2, 3]
+        assert sc["midstream_downs"] >= 1
+        assert sc["scale_downs"] >= sc["midstream_downs"]
+        # the floor held: the resumed request still found a worker
+        assert len(fleet._peers) >= 1
+
+
+def test_stream_no_midstream_retire_without_opt_in():
+    """Neither ``idle_retire_s`` nor ``liveness_timeout`` set: the lull
+    does not shrink the pool (existing autoscale behavior preserved)."""
+    def source():
+        yield _echo_bundle(0)
+        t0 = time.monotonic()
+        while time.monotonic() - t0 < 0.2:
+            yield None
+
+    with _EchoFleet(3, autoscale=True, scale_max=3) as fleet:
+        list(fleet.stream(source()))
+        assert fleet.last_scaling["midstream_downs"] == 0
+
+
+# ---------------------------------------------------------------------------
+# StandingFleet (injected loopback pool)
+# ---------------------------------------------------------------------------
+
+def _fold_of(bundles_by_idx):
+    fold = ReportFold(keep_reports=False)
+    for i in sorted(bundles_by_idx):
+        b = bundles_by_idx[i]
+        fold.add(i, EmulationReport(command=b.command, ttc_s=1e-3,
+                                    n_samples=1, consumed=b.planned,
+                                    mode="fused"))
+    return fold
+
+
+def test_standing_fleet_sessions_on_a_warm_pool():
+    cfg = FleetConfig.process(max_workers=1, timeout=30.0)
+    with _EchoFleet(1) as pool:
+        sf = StandingFleet(None, cfg, fleet=pool)
+        seen = []
+        unsub = sf.on_complete(
+            lambda rec, rep: seen.append((rec.idx, rep is not None)))
+        with pytest.raises(RuntimeError):
+            sf.drain()                       # no session yet
+        with pytest.raises(ValueError):
+            sf.submit()                      # exactly one of profile/bundle
+        subs = {i: _echo_bundle(i) for i in range(3)}
+        for i in range(3):
+            assert sf.submit(bundle=subs[i]) == i
+        res = sf.drain(timeout=10.0)
+        assert [r.idx for r in res.records] == [0, 1, 2]
+        assert all(r.ok for r in res.records)
+        assert all(isinstance(r.timing, BundleTiming)
+                   for r in res.records)
+        assert all(r.done is not None and r.done >= r.submitted
+                   for r in res.records)
+        assert res.n_ok == 3 and res.n_skipped == 0
+        # totals fold in index order: bit-identical to the reference fold
+        assert res.totals == _fold_of(subs).totals
+        assert sorted(seen) == [(0, True), (1, True), (2, True)]
+        unsub()
+        # second session on the same warm pool; indices restart
+        assert sf.submit(bundle=_echo_bundle(5)) == 0
+        res2 = sf.drain(timeout=10.0)
+        assert [r.idx for r in res2.records] == [0]
+        assert len(seen) == 3                # unsubscribed hook stayed quiet
+        sf.close()
+        with pytest.raises(RuntimeError):
+            sf.submit(bundle=_echo_bundle(9))
+
+
+def test_standing_fleet_skip_accounting():
+    cfg = FleetConfig.process(max_workers=1, on_failure="skip", timeout=30.0)
+    with _EchoFleet(1) as pool:
+        with StandingFleet(None, cfg, fleet=pool) as sf:
+            sf.submit(bundle=_echo_bundle(0))
+            sf.submit(bundle=_echo_bundle(1, command="poison"))
+            res = sf.drain(timeout=10.0)
+    assert res.n_ok == 1 and res.n_skipped == 1
+    assert res.records[1].ok is False
+
+
+# ---------------------------------------------------------------------------
+# HTTP layer (no sockets, plus one real-server smoke)
+# ---------------------------------------------------------------------------
+
+def _service():
+    return LoadService(Emulator(compute_tile=TILE, mem_block=BLOCK))
+
+
+def test_load_service_parse_spec():
+    svc = _service()
+    spec = svc._parse({"scenario": "serving_traffic", "process": "poisson",
+                       "rate_hz": 20.0, "n": 10, "seed": 11,
+                       "kill_every": 5, "chaos_seed": 3,
+                       "p_fanout": 4, "workers": 1,
+                       "slo_ms": 100.0, "slo_pct": 0.999})
+    assert spec["scenario"] == "serving_traffic"
+    assert spec["params"] == {"fanout": 4}
+    assert spec["knobs"] == {"rate_hz": 20.0}
+    cfg = spec["config"]
+    assert isinstance(cfg.chaos, ChaosPolicy)
+    assert cfg.chaos.kill_every == 5 and cfg.chaos.seed == 3
+    assert cfg.liveness_timeout == 5.0       # chaos arms liveness
+    assert cfg.on_failure == "skip"          # poison can't kill the service
+    assert spec["slo"] == SLO(target_ms=100.0, percentile=0.999)
+    # no fault knob => no chaos, no implied liveness
+    calm = svc._parse({"n": 5})
+    assert calm["config"].chaos is None
+    assert calm["config"].liveness_timeout is None
+    assert calm["n_requests"] == 5
+    assert svc._parse({})["n_requests"] == 50    # bounded by default
+    with pytest.raises(ValueError):
+        svc._parse({"process": "wat"})
+
+
+def test_load_service_routes_without_sockets():
+    svc = _service()
+    assert svc.route("/healthz") == {"ok": True}
+    out = svc.route("/scenarios")
+    assert "serving_traffic" in out["scenarios"]
+    assert out["processes"] == sorted(ARRIVAL_KINDS)
+    assert svc.route("/runs") == {"runs": []}
+    with pytest.raises(KeyError):
+        svc.route("/nope")
+    with pytest.raises(KeyError):
+        svc.route("/status?id=99")
+    # a bad spec fails in parsing, before any pool is spawned
+    with pytest.raises(ValueError):
+        svc.route("/run?process=wat")
+
+
+def test_http_server_smoke_port_zero():
+    server = make_server(port=0)
+    t = threading.Thread(target=server.serve_forever, daemon=True)
+    t.start()
+    try:
+        host, port = server.server_address[:2]
+        with urllib.request.urlopen(
+                f"http://{host}:{port}/healthz", timeout=10) as r:
+            assert json.loads(r.read()) == {"ok": True}
+        with urllib.request.urlopen(
+                f"http://{host}:{port}/scenarios", timeout=10) as r:
+            assert "poisson" in json.loads(r.read())["processes"]
+    finally:
+        server.shutdown()
+        t.join(10)
+        server.service.shutdown()
+        server.server_close()
+    assert not t.is_alive()                  # clean shutdown
+
+
+# ---------------------------------------------------------------------------
+# acceptance: seeded chaos-under-load is reproducible end to end
+# ---------------------------------------------------------------------------
+
+def _probe_profile(units=4):
+    return SynapseProfile(
+        command="svc-probe",
+        samples=[Sample(index=i, resources=_rv(flops=FPI, hbm=BPI))
+                 for i in range(units)])
+
+
+def _chaos_load_run():
+    em = Emulator(compute_tile=TILE, mem_block=BLOCK)
+    arrivals = PoissonArrivals(rate_hz=20.0, n_requests=12,
+                               scenario="svc_probe", seed=11)
+    config = FleetConfig.process(
+        max_workers=1,
+        chaos=ChaosPolicy(seed=3, kill_every=5, max_faults=1),
+        liveness_timeout=5.0, max_respawns=6, timeout=300.0)
+    return run_load(em, arrivals, config=config,
+                    slo=SLO(target_ms=100.0, percentile=0.999),
+                    window_s=0.5)
+
+
+@pytest.mark.slow
+@pytest.mark.subproc
+def test_seeded_chaos_storm_reproducible_and_mttr_lands_in_p999():
+    """The PR 8 acceptance contract: same (arrival seed, chaos seed) =>
+    identical arrival timeline and fault schedule run to run, exact
+    request totals, and the kill's MTTR visible in the faulted windows'
+    p999 — asserted, not printed."""
+    from repro.scenarios import register
+    from repro.scenarios.base import _REGISTRY
+    register("svc_probe", "exact-amount service probe", units=4)(
+        _probe_profile)
+    try:
+        # the arrival timeline is a pure function of the seed
+        mk = lambda: PoissonArrivals(rate_hz=20.0, n_requests=12,
+                                     scenario="svc_probe", seed=11)
+        assert [a.t for a in mk()] == [a.t for a in mk()]
+
+        r1 = _chaos_load_run()
+        r2 = _chaos_load_run()
+        for rep in (r1, r2):
+            assert rep.n_arrivals == 12
+            assert rep.serve.n_ok == 12 and rep.serve.n_skipped == 0
+            # exact totals: 12 requests x 4 samples, nothing lost to chaos
+            assert rep.serve.totals.flops == 12 * 4 * FPI
+            assert rep.serve.totals.hbm_bytes == 12 * 4 * BPI
+            rec = rep.serve.recovery
+            assert rec["worker_deaths"] >= 1      # the kill fired
+            assert rec["mttr_s"] and rec["mttr_s"] > 0
+            assert rep.slo["n_completed"] == 12
+            faulted = [w for w in rep.slo["windows"] if w["faults"]]
+            assert faulted, "the kill must mark SLO windows"
+            # the interrupted request waited out the respawn: the faulted
+            # windows' tail carries a meaningful fraction of the MTTR
+            assert max(w["p999"] for w in faulted) >= 0.5 * rec["mttr_s"]
+            assert len(rep.slo["faults"]) == rec["worker_deaths"]
+        # and the fault schedule itself replays exactly
+        assert (r1.serve.recovery["worker_deaths"]
+                == r2.serve.recovery["worker_deaths"])
+        assert len(r1.slo["faults"]) == len(r2.slo["faults"])
+    finally:
+        _REGISTRY.pop("svc_probe", None)
