@@ -1,0 +1,104 @@
+"""Service observability demo: /metrics scrape + /trace export.
+
+Starts ``repro.service`` on a port-0 HTTP server, drives one seeded
+chaos load run through ``/run``, then exercises the two observability
+surfaces end to end:
+
+* ``/trace?id=N`` — the run's merged flight-recorder timeline as
+  Chrome trace-event JSON, checked against the Perfetto schema;
+* ``/metrics`` — Prometheus text exposition format 0.0.4, re-read with
+  the strict parser (cumulative buckets, ``+Inf``/``_count`` match).
+
+    PYTHONPATH=src python examples/metrics_demo.py
+
+This is also what CI's ``obs-smoke`` job runs: every assert here is a
+contract, not an illustration.
+"""
+import json
+import os
+import sys
+import threading
+import time
+import urllib.request
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path[:0] = [os.path.join(_ROOT, 'src'), _ROOT]
+
+from repro.obs.metrics import parse_promtext
+from repro.obs.trace import validate_trace
+from repro.service.http import make_server
+
+
+def _get(base, path):
+    with urllib.request.urlopen(base + path, timeout=30) as r:
+        body = r.read()
+        ctype = r.headers.get("Content-Type", "")
+    return body, ctype
+
+
+def _get_json(base, path):
+    body, _ = _get(base, path)
+    return json.loads(body)
+
+
+def main():
+    server = make_server(port=0)          # port 0: pick a free one
+    host, port = server.server_address[:2]
+    base = f"http://{host}:{port}"
+    t = threading.Thread(target=server.serve_forever, daemon=True)
+    t.start()
+    print(f"serving on {base}")
+
+    try:
+        run = _get_json(base, "/run?scenario=serving_traffic&p_n_requests=3"
+                        "&process=poisson&rate_hz=20&n=12&seed=11"
+                        "&workers=2&kill_every=5&max_faults=1&chaos_seed=3"
+                        "&slo_ms=100&window_s=0.5")
+        rid = run["id"]
+        print(f"started run {rid}")
+        deadline = time.monotonic() + 180
+        while True:
+            st = _get_json(base, f"/status?id={rid}")
+            if st["state"] in ("done", "failed"):
+                break
+            assert time.monotonic() < deadline, "run did not finish"
+            time.sleep(0.5)
+        assert st["state"] == "done", st.get("error")
+        report = st["report"]
+        assert report["schema"] == 1
+        assert report["fleet"]["schema"] == 1
+        assert report["n_ok"] >= 1
+        assert st["trace"] == f"/trace?id={rid}"
+        print(f"run done: {report['n_ok']} ok, "
+              f"{report['fleet']['recovery'].get('worker_deaths', 0)} "
+              "worker death(s)")
+
+        trace = _get_json(base, st["trace"])
+        validate_trace(trace)
+        n_spans = sum(1 for e in trace["traceEvents"] if e.get("ph") == "X")
+        assert n_spans > 0, "trace must carry bundle spans"
+        print(f"trace: {len(trace['traceEvents'])} events "
+              f"({n_spans} spans) — Perfetto-schema valid")
+
+        body, ctype = _get(base, "/metrics")
+        assert ctype.startswith("text/plain"), ctype
+        fams = parse_promtext(body.decode())     # strict: raises on any
+        samples = fams["repro_service_runs_total"]["samples"]
+        assert samples[("repro_service_runs_total",
+                        '{state="done"}')] == 1.0
+        req = fams["repro_service_requests_total"]["samples"]
+        assert req[("repro_service_requests_total",
+                    '{outcome="ok"}')] >= 1.0
+        lat = fams["repro_service_request_latency_seconds"]["samples"]
+        assert lat[("repro_service_request_latency_seconds_count",
+                    "")] >= 1.0
+        assert fams["repro_service_runs_active"]["samples"][
+            ("repro_service_runs_active", "")] == 0.0
+        print(f"metrics: {len(fams)} families, strict parse ok")
+    finally:
+        server.shutdown()
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,11 +23,12 @@ import json
 import os
 import shutil
 import threading
-import time
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import numpy as np
+
+from repro.obs import clock as obs_clock
 
 MANIFEST = "manifest.json"
 COMMIT = "COMMIT"
@@ -96,7 +97,7 @@ class CheckpointManager:
             shutil.rmtree(tmp)
         os.makedirs(tmp)
         leaves = tree_flatten_named(host_tree)
-        manifest = {"step": step, "created_at": time.time(), "extra": extra,
+        manifest = {"step": step, "created_at": obs_clock.wall(), "extra": extra,
                     "leaves": {}}
         for name, arr in leaves.items():
             fn = name.replace("/", "__") + ".npy"

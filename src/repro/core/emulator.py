@@ -104,6 +104,32 @@ class EmulationReport:
                 "storage_read_bytes": self.consumed.storage_read_bytes,
                 "storage_write_bytes": self.consumed.storage_write_bytes}
 
+    def to_dict(self) -> Dict:
+        """Lossless JSON-able form (``from_dict`` round-trips it)."""
+        return {"command": self.command, "ttc_s": self.ttc_s,
+                "n_samples": self.n_samples,
+                "consumed": self.consumed.to_dict(),
+                "per_sample_s": list(self.per_sample_s),
+                "planned": (None if self.planned is None
+                            else self.planned.to_dict()),
+                "mode": self.mode, "n_dispatches": self.n_dispatches,
+                "n_collective_dispatches": self.n_collective_dispatches,
+                "emulated_ici_bytes": self.emulated_ici_bytes}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "EmulationReport":
+        return cls(command=d["command"], ttc_s=d["ttc_s"],
+                   n_samples=d["n_samples"],
+                   consumed=ResourceVector.from_dict(d["consumed"]),
+                   per_sample_s=list(d.get("per_sample_s", ())),
+                   planned=(None if d.get("planned") is None
+                            else ResourceVector.from_dict(d["planned"])),
+                   mode=d.get("mode", "per_sample"),
+                   n_dispatches=d.get("n_dispatches", 0),
+                   n_collective_dispatches=d.get(
+                       "n_collective_dispatches", 0),
+                   emulated_ici_bytes=d.get("emulated_ici_bytes", 0.0))
+
 
 @dataclass
 class FleetReport:
@@ -122,6 +148,9 @@ class FleetReport:
     the run (worker_deaths/hung_reaped/requeued/requeue_latency_s/
     lost_replay_s/mttr_s/skipped/speculative_dispatches/speculative_wins/
     heartbeats) — what every fault cost, not just that recovery happened.
+    ``obs`` is the observability snapshot (``repro.obs``): the merged
+    flight-recorder timeline (bounded), drop accounting, and a metrics
+    snapshot — populated by the ``FleetBase`` executors.
     """
     reports: List[EmulationReport]
     wall_s: float                        # concurrent fleet wall time
@@ -133,6 +162,7 @@ class FleetReport:
     n_replayed: int = 0                  # profiles replayed (any collect=)
     scaling: Dict[str, int] = field(default_factory=dict)
     recovery: Dict = field(default_factory=dict)
+    obs: Dict = field(default_factory=dict)
 
     @property
     def n_profiles(self) -> int:
@@ -162,6 +192,57 @@ class FleetReport:
         if self.recovery:
             out["recovery"] = dict(self.recovery)
         return out
+
+    #: schema version of ``to_json``; bump on any breaking field change
+    SCHEMA = 1
+
+    def to_json(self, *, reports: bool = True) -> Dict:
+        """Stable JSON-able form with a schema version field.
+
+        Everything round-trips through ``from_json`` — scaling, recovery
+        (fault_events tuples become lists, as JSON requires), the obs
+        snapshot, and (unless ``reports=False``, the bounded-memory
+        service mode) the per-profile reports.
+        """
+        rec = dict(self.recovery)
+        if "fault_events" in rec:
+            rec["fault_events"] = [list(fe) for fe in rec["fault_events"]]
+        return {
+            "schema": self.SCHEMA,
+            "reports": ([r.to_dict() for r in self.reports]
+                        if reports else []),
+            "wall_s": self.wall_s, "serial_s": self.serial_s,
+            "max_workers": self.max_workers,
+            "cache_stats": dict(self.cache_stats),
+            "totals": (None if self.totals is None
+                       else self.totals.to_dict()),
+            "n_samples": self.n_samples, "n_replayed": self.n_replayed,
+            "scaling": dict(self.scaling), "recovery": rec,
+            "obs": self.obs,
+        }
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "FleetReport":
+        schema = d.get("schema")
+        if schema != cls.SCHEMA:
+            raise ValueError(
+                f"FleetReport schema {schema!r} is not supported "
+                f"(this build reads schema {cls.SCHEMA})")
+        rec = dict(d.get("recovery", {}))
+        if "fault_events" in rec:
+            rec["fault_events"] = [tuple(fe) for fe in rec["fault_events"]]
+        return cls(
+            reports=[EmulationReport.from_dict(r)
+                     for r in d.get("reports", ())],
+            wall_s=d["wall_s"], serial_s=d["serial_s"],
+            max_workers=d["max_workers"],
+            cache_stats=dict(d.get("cache_stats", {})),
+            totals=(None if d.get("totals") is None
+                    else ResourceVector.from_dict(d["totals"])),
+            n_samples=d.get("n_samples", 0),
+            n_replayed=d.get("n_replayed", 0),
+            scaling=dict(d.get("scaling", {})), recovery=rec,
+            obs=dict(d.get("obs", {})))
 
 
 class ReportFold:

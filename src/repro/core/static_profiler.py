@@ -17,13 +17,13 @@ profile, returning (profile, compiled).
 """
 from __future__ import annotations
 
-import time
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 
 from repro.core import hlo_analysis
 from repro.core.metrics import ResourceVector, Sample, SynapseProfile
+from repro.obs import clock as obs_clock
 
 
 def _rv(cost: hlo_analysis.HloCost, use_dot_bytes: bool = True) -> ResourceVector:
@@ -77,10 +77,10 @@ def profile_step(fn, *args, command: str, tags=None, mesh=None,
                  granularity: str = "scan", donate_argnums=(),
                  ) -> Tuple[SynapseProfile, Any]:
     """Lower + compile ``fn(*args)`` (abstract or concrete) and profile it."""
-    t0 = time.time()
+    t0 = obs_clock.now()
     lowered = jax.jit(fn, donate_argnums=donate_argnums).lower(*args)
     compiled = lowered.compile()
     prof = profile_compiled(compiled, command=command, tags=tags,
                             granularity=granularity, mesh=mesh)
-    prof.meta["lower_compile_s"] = time.time() - t0
+    prof.meta["lower_compile_s"] = obs_clock.now() - t0
     return prof, compiled

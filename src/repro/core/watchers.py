@@ -7,6 +7,12 @@ protocol: ``_pre_process`` / ``_sample`` / ``_post_process`` / ``_finalize``
 measurements, e.g. runtime).  Timestamps are per-watcher and unsynchronized,
 exactly as the paper chose (IV-A): skew is preferred over sync overhead.
 
+All stamps route through ``repro.obs.clock``: sample timestamps are the
+anchored wall projection of the monotonic clock, and every duration
+(watcher wall_s, profiled-callable wall) is a monotonic difference — an
+NTP step mid-profile can no longer produce a negative or inflated
+duration.
+
 These watchers profile *this* process (the JAX host process executing
 jitted steps) — on a real TPU VM the same code observes the host side while
 the static watcher (hlo_analysis) covers the device side.
@@ -15,11 +21,11 @@ from __future__ import annotations
 
 import os
 import threading
-import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
 from repro.core.metrics import ResourceVector, Sample, SynapseProfile
+from repro.obs import clock as obs_clock
 
 DEFAULT_SAMPLE_RATE = float(os.environ.get("SYNAPSE_SAMPLE_RATE", "10"))
 
@@ -57,7 +63,7 @@ class WatcherBase:
         self._sample_interval = 1.0 / config.get("sample_rate",
                                                  DEFAULT_SAMPLE_RATE)
         while not self._terminate.is_set():
-            now = time.time()
+            now = obs_clock.wall()        # anchored: step-free wall stamps
             try:
                 self._sample(now)
             except Exception:  # noqa: BLE001 — a failing sampler must not
@@ -90,7 +96,7 @@ class CPUWatcher(WatcherBase):
 
     def _pre_process(self, config):
         self._hz = os.sysconf("SC_CLK_TCK")
-        self._t0 = time.time()
+        self._t0 = obs_clock.now()
 
     def _sample(self, now: float):
         parts = _read_proc(f"/proc/{self.pid}/stat").rsplit(")", 1)[1].split()
@@ -98,7 +104,7 @@ class CPUWatcher(WatcherBase):
         self.samples.append({"t": now, "cpu_s": (utime + stime) / self._hz})
 
     def _post_process(self):
-        self.result["wall_s"] = time.time() - self._t0
+        self.result["wall_s"] = obs_clock.now() - self._t0
         if self.samples:
             self.result["cpu_s"] = self.samples[-1]["cpu_s"]
             self.result["cpu_series"] = self.samples
@@ -167,9 +173,9 @@ class RuntimeProfiler:
         cfg = {"sample_rate": self.sample_rate}
         for w in ws.values():
             w.start(cfg)
-        t0 = time.time()
+        t0 = obs_clock.now()
         fn()
-        wall = time.time() - t0
+        wall = obs_clock.now() - t0
         for w in ws.values():
             w.stop()
         for w in ws.values():

@@ -97,6 +97,26 @@ Thread vs process vs remote executor — decision matrix:
                                             chaos MTTR windows
                                             into the latency
                                             timeline
+  traced?             partial: coordinator  YES: every party      YES: same recorder on
+                      flight recorder       (coordinator, each    each agent; frames
+                      only (no worker-      worker) runs a        hop agent->coordinator
+                      side recorder to      FlightRecorder;       with the same clock
+                      ship home)            worker frames ship    echo, so remote spans
+                                            home piggybacked on   rebase through per-
+                                            results, rebased      peer offset estimates;
+                                            via per-peer          export with
+                                            ClockSync onto one    repro.obs.trace or
+                                            timeline              ``repro.scenarios
+                                            (FleetReport.obs,     trace``
+                                            Perfetto-exportable)
+  metrics endpoint?   no (in-process        YES: fleet-level      YES: the same registry;
+                      registry snapshot     MetricsRegistry       plus the service
+                      only)                 snapshot in           /metrics scrape when
+                                            FleetReport.obs;      driven through
+                                            live Prometheus       repro.service
+                                            scrape at /metrics
+                                            when driven through
+                                            repro.service
   best for            small fleets, tiny    large fleets,         fleets bigger than one
                       profiles, tests       collective legs,      machine; real TPU
                                             saturating a host     hosts joining later

@@ -50,6 +50,8 @@ from typing import List, Optional
 
 from repro.fleet.transport import framing
 from repro.fleet.transport.remote import _IO_TIMEOUT, parse_addr
+from repro.obs import clock as obs_clock
+from repro.obs.recorder import FlightRecorder
 
 
 def log(msg: str) -> None:
@@ -75,6 +77,20 @@ def serve(sock: socket.socket, n_workers: int) -> int:
     actor = chaos.actor("agent") if chaos is not None else None
     send_lock = threading.Lock()   # heartbeat thread vs serve loop: one
     hb_stop = threading.Event()    # frame on the wire at a time
+    # the agent's own flight recorder: local worker frames are absorbed
+    # (rebased through the per-worker clock sync) and re-shipped to the
+    # coordinator on each proxied result, so remote worker events reach
+    # the merged timeline through two offset estimations, not one guess
+    recorder = FlightRecorder("agent", capacity=2048)
+
+    def absorb_local(peer, frame) -> None:
+        if frame is None:
+            return
+        t_recv = obs_clock.now()
+        if frame.echo_t is not None:
+            peer.sync.observe(frame.echo_t, frame.sent_at, t_recv)
+        recorder.absorb(frame,
+                        peer.sync.to_local if peer.sync.synced else None)
 
     def send(msg, *, _mangle=None) -> None:
         with send_lock:
@@ -133,6 +149,8 @@ def serve(sock: socket.socket, n_workers: int) -> int:
         respawn budget is spent the pool shrank for good, and the
         coordinator must stop filling slots this host no longer has."""
         for e, idx in list(peer.tasks):
+            recorder.record("requeue", idx=idx,
+                            reason="agent-local worker died")
             send(("retry", e, idx, "agent-local worker died"))
         peer.tasks.clear()
         fleet._reap(peer, deque())
@@ -154,7 +172,9 @@ def serve(sock: socket.socket, n_workers: int) -> int:
                     if msg[0] == "stop":
                         stopping = True
                     elif msg[0] == "run":
-                        _, epoch, idx, bundle = msg
+                        epoch, idx, bundle = msg[1], msg[2], msg[3]
+                        if len(msg) > 4:     # coordinator clock echo
+                            recorder.last_echo = msg[4]
                         pending.append((epoch, idx, bundle))
                     continue
                 peer = next(p for p in fleet._peers if p.waitable is obj)
@@ -166,18 +186,24 @@ def serve(sock: socket.socket, n_workers: int) -> int:
                 kind = reply[0]
                 if kind == "ready":
                     peer.ready = True          # a respawned replacement
+                elif kind == "obs":
+                    absorb_local(peer, reply[1])
                 elif kind == "ok":
-                    _, e, idx, rep = reply
+                    e, idx, rep = reply[1], reply[2], reply[3]
+                    absorb_local(peer,
+                                 reply[4] if len(reply) > 4 else None)
                     peer.tasks.discard((e, idx))
                     served += 1
-                    send_result(("ok", e, idx, rep))
+                    send_result(("ok", e, idx, rep, recorder.drain()))
                 elif kind == "err":
-                    _, e, idx, tb = reply
+                    e, idx, tb = reply[1], reply[2], reply[3]
                     if idx is None:            # replacement failed init
                         reap_local(peer)
                     else:
+                        absorb_local(peer,
+                                     reply[4] if len(reply) > 4 else None)
                         peer.tasks.discard((e, idx))
-                        send_result(("err", e, idx, tb))
+                        send_result(("err", e, idx, tb, recorder.drain()))
                 # "ping" from a local worker: nothing to proxy — the
                 # agent's own heartbeat is the coordinator-facing signal
             # -- dispatch queued bundles to free local slots --------------
@@ -193,6 +219,7 @@ def serve(sock: socket.socket, n_workers: int) -> int:
                         pending.appendleft((epoch, idx, bundle))
                         reap_local(peer)
                         break
+                    recorder.record("dispatch", idx=idx, peer=peer.scope)
             if not fleet._peers and not fleet._pending_refill():
                 for epoch, idx, _ in pending:
                     send(("retry", epoch, idx,
@@ -212,6 +239,12 @@ def serve(sock: socket.socket, n_workers: int) -> int:
         return 3
     finally:
         hb_stop.set()
+        try:
+            # ship whatever the recorder still holds (events since the
+            # last proxied result) before leaving the fleet
+            send(("obs", recorder.drain()))
+        except Exception:  # noqa: BLE001 — exit path, connection may be gone
+            pass
         fleet.close()
     log(f"served {served} bundle(s), exiting")
     return 0

@@ -78,6 +78,10 @@ from repro.core.emulator import (EmulationReport, Emulator, FleetReport,
 from repro.fleet.bundle import ScheduleBundle, WorkerSpec, bundle_profile
 from repro.fleet.chaos import ChaosPolicy
 from repro.fleet.worker import worker_loop
+from repro.obs import clock as obs_clock
+from repro.obs.clock import ClockSync
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.recorder import FlightRecorder, ObsFrame
 
 _MAX_ATTEMPTS = 3          # dispatches per bundle before declaring it poison
 
@@ -145,6 +149,12 @@ class Peer:
         self.tasks: Set[Tuple[int, int]] = set()
         self.ready = False
         self.last_seen = time.monotonic()
+        #: flight-recorder track name; transports set the real one
+        #: (ProcessFleet: the spawn scope "worker:<n>")
+        self.scope = "peer"
+        #: per-peer clock-offset estimator, refined by the echo carried
+        #: on every ObsFrame this peer ships home
+        self.sync = ClockSync()
 
     @property
     def free_slots(self) -> int:
@@ -227,6 +237,51 @@ class FleetBase:
         #: — the joinable form of ``_mttr_samples`` (the SLO engine lines
         #: these up against the latency timeline for chaos attribution)
         self.fault_events: List[Tuple[float, float]] = []
+        #: coordinator flight recorder: the merge target for every
+        #: worker/agent frame that ships home (``repro.obs``)
+        self.recorder = FlightRecorder("coordinator")
+        #: Prometheus-style registry; scraped by ``repro.service`` and
+        #: snapshotted into ``FleetReport.obs``
+        self.metrics = MetricsRegistry()
+        self._m_dispatch = self.metrics.counter(
+            "repro_fleet_dispatch_total", "bundle dispatches")
+        self._m_requeue = self.metrics.counter(
+            "repro_fleet_requeue_total", "bundles returned for retry")
+        self._m_deaths = self.metrics.counter(
+            "repro_fleet_worker_deaths_total", "reaped peers")
+        self._m_heartbeats = self.metrics.counter(
+            "repro_fleet_heartbeats_total", "liveness pings observed")
+        self._m_done = self.metrics.counter(
+            "repro_fleet_done_total", "bundles completed")
+        self._m_skip = self.metrics.counter(
+            "repro_fleet_skip_total", "bundles skipped (degraded mode)")
+        self._m_scale = self.metrics.counter(
+            "repro_fleet_scale_events_total", "elasticity events")
+        self._m_workers = self.metrics.gauge(
+            "repro_fleet_workers", "current worker slots")
+        self._m_replay = self.metrics.histogram(
+            "repro_fleet_replay_seconds", "dispatch-to-result latency")
+        self._m_queue = self.metrics.histogram(
+            "repro_fleet_queue_seconds", "pending-queue residency")
+
+    def _absorb_frame(self, peer: Peer, frame: Optional[ObsFrame]) -> None:
+        """Merge a piggybacked worker/agent buffer onto the coordinator
+        timeline: fold the frame's clock echo into the peer's offset
+        estimate, then rebase every event through it."""
+        if frame is None:
+            return
+        t_recv = obs_clock.now()
+        if frame.echo_t is not None:
+            peer.sync.observe(frame.echo_t, frame.sent_at, t_recv)
+        self.recorder.absorb(
+            frame, peer.sync.to_local if peer.sync.synced else None)
+
+    def obs_snapshot(self, last_n: Optional[int] = None) -> Dict:
+        """The ``FleetReport.obs`` payload: merged timeline (bounded),
+        drop accounting, metrics snapshot."""
+        snap = self.recorder.snapshot(last_n)
+        snap["metrics"] = self.metrics.snapshot()
+        return snap
 
     # -- pool plumbing ------------------------------------------------------
 
@@ -236,6 +291,10 @@ class FleetBase:
         to the current run — stragglers from a raised run are dropped),
         then refill the pool.  ``hung`` peers get no teardown grace."""
         self.worker_deaths += 1
+        self._m_deaths.inc()
+        self.recorder.record("fault_opened", peer=peer.scope,
+                             hung=hung,
+                             in_flight=sorted(i for _, i in peer.tasks))
         for e, idx in peer.tasks:
             if epoch is not None and e == epoch:
                 pending.appendleft(idx)
@@ -264,9 +323,10 @@ class FleetBase:
         window, if a refill was outstanding."""
         if self._fault_opened:
             opened = self._fault_opened.popleft()
-            now = time.monotonic()
+            now = obs_clock.now()
             self._mttr_samples.append(now - opened)
             self.fault_events.append((opened, now))
+            self.recorder.record("fault_repaired", mttr_s=now - opened)
 
     def _scale_up(self) -> bool:
         """Hook: add one peer of capacity (autoscale).  Returns True if the
@@ -277,9 +337,13 @@ class FleetBase:
         """Politely release an idle peer (autoscale down).  Not a death:
         no requeue, no refill, no ``worker_deaths``."""
         peer.stop()
+        if hasattr(peer, "drain_obs"):
+            self._absorb_frame(peer, peer.drain_obs(0.2))
         peer.close()
         self._peers.remove(peer)
         self.scale_downs += 1
+        self._m_scale.inc(direction="down")
+        self.recorder.record("scale_down", peer=peer.scope)
 
     def _assemble(self, timeout: float) -> None:
         """Hook: block until the initial pool is usable (RemoteFleet gates
@@ -484,6 +548,10 @@ class FleetBase:
             for e, i in peer.tasks:
                 if e == epoch and i in held:
                     requeued += 1
+                    self._m_requeue.inc()
+                    self.recorder.record("requeue", idx=i,
+                                         reason="peer-died",
+                                         peer=peer.scope)
                     t = disp_at.pop(i, None)
                     if t is not None:
                         lost_replay += now - t
@@ -492,8 +560,10 @@ class FleetBase:
                     # charges queue time again, never replay time
 
         def skip(idx: int) -> None:
-            now = time.monotonic()
+            now = obs_clock.now()
             skipped.append(idx)
+            self._m_skip.inc()
+            self.recorder.record("skip", idx=idx)
             held.pop(idx, None)
             att = attempts.pop(idx, None)
             t = disp_at.pop(idx, None)
@@ -527,11 +597,12 @@ class FleetBase:
                         # admitting this pass, keep the scheduler turning
                         saw_none = True
                         break
-                    now = time.monotonic()
+                    now = obs_clock.now()
                     held[next_idx] = b
                     pending.append(next_idx)
                     attempts[next_idx] = 0
                     enq_at[next_idx] = q_since[next_idx] = now
+                    self.recorder.record("enqueue", idx=next_idx)
                     next_idx += 1
                 if exhausted and not held:
                     break
@@ -573,8 +644,12 @@ class FleetBase:
                             account_requeue(peer, time.monotonic())
                             self._reap(peer, pending, epoch)
                             break
-                        now = time.monotonic()
+                        now = obs_clock.now()
                         disp_at[idx] = now
+                        self._m_dispatch.inc()
+                        self.recorder.record("dispatch", idx=idx,
+                                             peer=peer.scope,
+                                             attempt=attempts[idx])
                         # a dispatch is an interaction: restart the liveness
                         # window, or a peer idle longer than the timeout
                         # would be reaped the moment it got new work
@@ -590,7 +665,10 @@ class FleetBase:
                 if self._autoscale:
                     if pending and not any(p.alive and p.free_slots > 0
                                            for p in self._peers):
-                        self._scale_up()
+                        if self._scale_up():
+                            self._m_scale.inc(direction="up")
+                            self.recorder.record(
+                                "scale_up", workers=len(self._peers))
                         low_q_since = None
                     elif exhausted and not pending:
                         # long tail: peers that already drained go idle
@@ -619,8 +697,9 @@ class FleetBase:
                             low_q_since = now_e
                     else:
                         low_q_since = None
-                peak_workers = max(peak_workers,
-                                   sum(p.capacity for p in self._peers))
+                cap_now = sum(p.capacity for p in self._peers)
+                peak_workers = max(peak_workers, cap_now)
+                self._m_workers.set(cap_now)
                 # -- liveness: reap hung-but-connected peers --------------
                 if liveness_timeout is not None:
                     now = time.monotonic()
@@ -663,8 +742,12 @@ class FleetBase:
                             spec_extra.add(idx)
                             spec_peer[idx] = twin
                             spec_dispatches += 1
-                            disp_at[idx] = time.monotonic()
+                            disp_at[idx] = obs_clock.now()
                             twin.last_seen = disp_at[idx]
+                            self._m_dispatch.inc()
+                            self.recorder.record(
+                                "dispatch", idx=idx, peer=twin.scope,
+                                attempt=attempts[idx], speculative=True)
                 if not self._peers and not self._pending_refill():
                     raise RuntimeError(
                         f"all fleet workers died ({self.worker_deaths} "
@@ -687,21 +770,29 @@ class FleetBase:
                         account_requeue(peer, time.monotonic())
                         self._reap(peer, pending, epoch)
                         continue
-                    now = time.monotonic()
+                    now = obs_clock.now()
                     peer.last_seen = now
                     kind = msg[0]
                     if kind == "ping":
                         pings += 1
+                        self._m_heartbeats.inc()
+                        self.recorder.record("heartbeat", peer=peer.scope)
                     elif kind == "ready":
                         peer.ready = True
                         self._note_ready()
+                    elif kind == "obs":
+                        # a final buffer shipped on stop/drain
+                        self._absorb_frame(peer, msg[1])
                     elif kind == "ok":
-                        _, e, idx, rep = msg
+                        e, idx, rep = msg[1], msg[2], msg[3]
+                        self._absorb_frame(peer,
+                                           msg[4] if len(msg) > 4 else None)
                         peer.tasks.discard((e, idx))
                         if e == epoch and idx in held:
                             t = disp_at.pop(idx, None)
                             if t is not None:
                                 done_times.append(max(0.0, now - t))
+                                self._m_replay.observe(max(0.0, now - t))
                             twin = spec_peer.pop(idx, None)
                             if twin is not None and twin is peer:
                                 spec_wins += 1
@@ -710,6 +801,10 @@ class FleetBase:
                             att = attempts.pop(idx, None)
                             q_since.pop(idx, None)
                             qw = q_wait.pop(idx, 0.0)
+                            self._m_queue.observe(qw)
+                            self._m_done.inc()
+                            self.recorder.record("done", idx=idx,
+                                                 peer=peer.scope)
                             enq = enq_at.pop(idx, now)
                             if record_timing is not None:
                                 record_timing(idx, BundleTiming(
@@ -725,6 +820,10 @@ class FleetBase:
                         if e == epoch and idx in held \
                                 and idx not in pending:
                             requeued += 1
+                            self._m_requeue.inc()
+                            self.recorder.record("requeue", idx=idx,
+                                                 reason=str(_reason),
+                                                 peer=peer.scope)
                             t = disp_at.pop(idx, None)
                             if t is not None:
                                 lost_replay += now - t
@@ -732,7 +831,9 @@ class FleetBase:
                             q_since[idx] = now
                             pending.append(idx)
                     elif kind == "err":
-                        _, e, idx, tb = msg
+                        e, idx, tb = msg[1], msg[2], msg[3]
+                        self._absorb_frame(peer,
+                                           msg[4] if len(msg) > 4 else None)
                         if idx is None:
                             raise RuntimeError(
                                 "fleet worker failed on initialization:"
@@ -813,6 +914,11 @@ class FleetBase:
         for peer in self._peers:
             peer.stop()
         for peer in self._peers:
+            # collect the final buffer a stopping peer ships (events
+            # since its last result — the stop-frame piggyback)
+            if hasattr(peer, "drain_obs"):
+                self._absorb_frame(peer, peer.drain_obs(0.2))
+        for peer in self._peers:
             peer.close()
         self._peers.clear()
         self._close_extras()
@@ -854,7 +960,9 @@ class _PipePeer(Peer):
 
     def dispatch(self, epoch, idx, bundle):
         try:
-            self.conn.send(("run", idx, bundle))
+            # the trailing stamp is the clock echo: the worker copies it
+            # into the ObsFrame it ships home, closing the offset loop
+            self.conn.send(("run", idx, bundle, obs_clock.now()))
         except (BrokenPipeError, OSError) as e:
             raise PeerGone(str(e)) from e
         self.tasks.add((epoch, idx))
@@ -869,12 +977,16 @@ class _PipePeer(Peer):
             return ("ping",)
         if kind == "ready":
             return ("ready", msg[1])
+        if kind == "obs":
+            return ("obs", msg[1])
         if kind == "ok":
-            _, idx, rep = msg
-            return ("ok", self.epoch_for(idx), idx, rep)
+            idx, rep = msg[1], msg[2]
+            frame = msg[3] if len(msg) > 3 else None
+            return ("ok", self.epoch_for(idx), idx, rep, frame)
         if kind == "err":
-            _, idx, tb = msg
-            return ("err", self.epoch_for(idx), idx, tb)
+            idx, tb = msg[1], msg[2]
+            frame = msg[3] if len(msg) > 3 else None
+            return ("err", self.epoch_for(idx), idx, tb, frame)
         return ("err", None, None, f"unknown worker message {kind!r}")
 
     def stop(self):
@@ -883,6 +995,21 @@ class _PipePeer(Peer):
                 self.conn.send(("stop",))
             except (BrokenPipeError, OSError):
                 pass
+
+    def drain_obs(self, timeout: float = 0.5):
+        """Best-effort read of the final ``("obs", frame)`` a stopped
+        worker ships on its way out; returns the frame or None."""
+        deadline = time.monotonic() + timeout
+        try:
+            while time.monotonic() < deadline:
+                if not self.conn.poll(max(0.0, deadline - time.monotonic())):
+                    return None
+                msg = self.conn.recv()
+                if msg and msg[0] == "obs":
+                    return msg[1]
+        except (EOFError, ConnectionResetError, OSError):
+            return None
+        return None
 
     def close(self):
         try:
@@ -999,7 +1126,9 @@ class ProcessFleet(FleetBase):
                 else:
                     os.environ["XLA_FLAGS"] = old_flags
         child_conn.close()
-        self._peers.append(_PipePeer(proc, parent_conn))
+        peer = _PipePeer(proc, parent_conn)
+        peer.scope = scope          # flight-recorder track == chaos scope
+        self._peers.append(peer)
 
     def _refill(self, pending: Deque[int]) -> None:
         """A worker died: schedule a replacement with exponential backoff
@@ -1014,6 +1143,9 @@ class ProcessFleet(FleetBase):
                 self._crash_window:
             self._death_log.popleft()
         if self._crash_limit and len(self._death_log) >= self._crash_limit:
+            self.recorder.record("crash_loop",
+                                 deaths=len(self._death_log),
+                                 window_s=self._crash_window)
             raise CrashLoopError(
                 f"fleet worker spec is crash-looping: "
                 f"{len(self._death_log)} death(s) within "
@@ -1068,6 +1200,9 @@ class ProcessFleet(FleetBase):
         self._peers.clear()
         for p in peers:
             p.stop()                        # all stops in flight first
+        for p in peers:
+            # final flight-recorder buffers ride the stop frame home
+            self._absorb_frame(p, p.drain_obs(0.2))
         for p in peers:
             try:
                 p.conn.close()
@@ -1162,13 +1297,14 @@ def run_process_fleet(emulator: Emulator, profiles, *, max_workers: int = 4,
                 dict(fleet.last_scaling), dict(fleet.last_recovery),
                 fleet.n_workers)
 
-    def _report(stats, scaling, recovery, n_workers):
+    def _report(stats, scaling, recovery, n_workers, last_n=None):
         return FleetReport(
             reports=fold.reports, wall_s=time.perf_counter() - t0,
             serial_s=fold.serial_s, max_workers=n_workers,
             cache_stats=stats, totals=fold.totals,
             n_samples=n_samples["n"], n_replayed=fold.n_done,
-            scaling=scaling, recovery=recovery)
+            scaling=scaling, recovery=recovery,
+            obs=fleet.obs_snapshot(last_n))
 
     gen = fleet.stream(_bundles(), timeout=timeout, window=window,
                        max_attempts=max_attempts,
@@ -1187,7 +1323,10 @@ def run_process_fleet(emulator: Emulator, profiles, *, max_workers: int = 4,
         # partially-folded totals and fault accounting ride out on the
         # exception instead of being lost
         gen.close()
-        e.fleet_report = _report(*_snapshot())
+        # postmortem: the last events of the merged timeline ride out on
+        # the exception (CrashLoopError, poison, timeout) so failure
+        # analysis sees the sequence, not just totals
+        e.fleet_report = _report(*_snapshot(), last_n=256)
         raise
     finally:
         if own:

@@ -27,14 +27,23 @@ epoch so a straggler reply from an aborted run can never be mistaken
 for a live one):
 
   coordinator -> agent:  ("spec", WorkerSpec)
-                         ("run", epoch, idx, ScheduleBundle)
+                         ("run", epoch, idx, ScheduleBundle[, t_sent])
                          ("stop",)
   agent -> coordinator:  ("ready", info)
-                         ("ok", epoch, idx, EmulationReport)
+                         ("ok", epoch, idx, EmulationReport[, ObsFrame])
                          ("retry", epoch, idx, reason)   requeue: an
                               agent-local worker died with this in flight
-                         ("err", epoch, idx, traceback)  idx=None: the
-                              agent itself failed to initialize
+                         ("err", epoch, idx, traceback[, ObsFrame])
+                              idx=None: the agent failed to initialize
+                         ("obs", ObsFrame)  final buffer, shipped on stop
+
+The optional trailing fields are the flight-recorder piggyback
+(``repro.obs``): a dispatch carries the coordinator's monotonic stamp,
+and results ship the agent's drained event buffer (its own events plus
+its local workers', already rebased to the agent clock) with that stamp
+echoed — the coordinator folds the echo into a per-agent clock-offset
+estimate and merges the events onto the run timeline.  Both arities are
+accepted on both ends.
 """
 from __future__ import annotations
 
@@ -46,6 +55,7 @@ from repro.core.emulator import Emulator, FleetReport, ReportFold
 from repro.fleet.bundle import WorkerSpec, bundle_profile
 from repro.fleet.executor import FleetBase, Peer, PeerGone
 from repro.fleet.transport import framing
+from repro.obs import clock as obs_clock
 
 _IO_TIMEOUT = 60.0         # per-chunk socket deadline: a wedged peer is
                            # a dead peer, not a hung coordinator
@@ -74,6 +84,8 @@ class AgentPeer(Peer):
         self.sock = sock
         self.addr = addr
         self.capacity = 1          # grows when the ready info arrives
+        self.scope = f"agent:{addr[0]}:{addr[1]}"
+        self._named = False        # upgraded to the hostname on ready
 
     @property
     def waitable(self):
@@ -81,7 +93,9 @@ class AgentPeer(Peer):
 
     def dispatch(self, epoch, idx, bundle):
         try:
-            framing.send_frame(self.sock, ("run", epoch, idx, bundle))
+            framing.send_frame(self.sock,
+                               ("run", epoch, idx, bundle,
+                                obs_clock.now()))
         except framing.TransportError as e:
             raise PeerGone(str(e)) from e
         self.tasks.add((epoch, idx))
@@ -99,8 +113,12 @@ class AgentPeer(Peer):
         if kind == "ready":
             info = msg[1]
             self.capacity = max(1, int(info.get("workers", 1)))
+            if not self._named and isinstance(info, dict) \
+                    and info.get("host"):
+                self.scope = f"agent:{info['host']}"
+                self._named = True
             return ("ready", info)
-        if kind in ("ok", "retry", "err"):
+        if kind in ("ok", "retry", "err", "obs"):
             return msg
         return ("err", None, None, f"unknown agent message {kind!r}")
 
@@ -109,6 +127,25 @@ class AgentPeer(Peer):
             framing.send_frame(self.sock, ("stop",))
         except framing.TransportError:
             pass
+
+    def drain_obs(self, timeout: float = 0.5):
+        """Best-effort read of the final ``("obs", frame)`` a stopped
+        agent ships on its way out; returns the frame or None."""
+        try:
+            self.sock.settimeout(timeout)
+            while True:
+                msg = framing.recv_frame(self.sock)
+                if msg and msg[0] == "obs":
+                    return msg[1]
+                if msg and msg[0] not in ("ping",):
+                    return None     # a late result: too late to use
+        except (framing.TransportError, OSError):
+            return None
+        finally:
+            try:
+                self.sock.settimeout(_IO_TIMEOUT)
+            except OSError:
+                pass
 
     def close(self):
         try:
@@ -329,12 +366,13 @@ def run_remote_fleet(emulator: Emulator, profiles, *,
                 dict(fleet.last_scaling), dict(fleet.last_recovery),
                 fleet.n_workers)
 
-    def _report(stats, scaling, recovery, workers):
+    def _report(stats, scaling, recovery, workers, last_n=None):
         return FleetReport(
             reports=fold.reports, wall_s=time.perf_counter() - t0,
             serial_s=fold.serial_s, max_workers=workers, cache_stats=stats,
             totals=fold.totals, n_samples=n_samples["n"],
-            n_replayed=fold.n_done, scaling=scaling, recovery=recovery)
+            n_replayed=fold.n_done, scaling=scaling, recovery=recovery,
+            obs=fleet.obs_snapshot(last_n))
 
     gen = fleet.stream(_bundles(), timeout=timeout, window=window,
                        max_attempts=max_attempts,
@@ -352,7 +390,8 @@ def run_remote_fleet(emulator: Emulator, profiles, *,
         # scaling/recovery records, then let the partial report ride out
         # on the exception
         gen.close()
-        e.fleet_report = _report(*_snapshot())
+        # postmortem: the merged timeline's tail rides out on the raise
+        e.fleet_report = _report(*_snapshot(), last_n=256)
         raise
     finally:
         if own:

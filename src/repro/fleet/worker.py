@@ -10,12 +10,21 @@ point of shipping detached schedules.
 
 Protocol (pickled tuples over the pipe):
 
-  parent -> worker:  ("run", idx, ScheduleBundle) | ("stop",)
+  parent -> worker:  ("run", idx, ScheduleBundle[, t_sent]) | ("stop",)
   worker -> parent:  ("ready", info_dict)
-                     ("ok", idx, EmulationReport)
-                     ("err", idx | None, traceback_str)
+                     ("ok", idx, EmulationReport[, ObsFrame])
+                     ("err", idx | None, traceback_str[, ObsFrame])
                      ("ping",)   heartbeat, sent every ``heartbeat_s``
                                  from a daemon thread when the spec asks
+                     ("obs", ObsFrame)   final buffer, shipped on stop
+
+The optional trailing fields are the flight-recorder piggyback
+(``repro.obs``): dispatches carry the coordinator's clock stamp, and
+every result ships the worker's drained event buffer home with that
+stamp echoed, so the coordinator can estimate this worker's clock
+offset and merge its events onto one timeline.  Both arities are
+accepted on both ends — test fakes and older tooling speak the bare
+tuples unchanged.
 
 A bundle that fails to replay sends ``err`` and the worker keeps serving
 (the parent decides whether to abort); a failure during initialization
@@ -78,8 +87,15 @@ def _init(spec):
 
 def worker_loop(conn, spec, scope: str = "worker:0") -> None:
     """Process entry point: initialize, announce readiness, serve bundles."""
+    from repro.obs.recorder import FlightRecorder
+
     chaos = getattr(spec, "chaos", None)
     actor = chaos.actor(scope) if chaos is not None else None
+    # this worker's flight recorder: drained onto every reply, so the
+    # coordinator's timeline grows worker-side events (replays,
+    # collective legs) as results land — a kill loses only the events
+    # since the last reply, which is exactly what a crash should cost
+    recorder = FlightRecorder(scope, capacity=2048)
     if actor is not None and chaos.kill_on_init:
         # the crash-loop test vector: a spec that can never come up.
         # Die before the (expensive) emulator build so the breaker is
@@ -125,11 +141,17 @@ def worker_loop(conn, spec, scope: str = "worker:0") -> None:
             except EOFError:          # parent died: nothing left to serve
                 break
             if msg[0] == "stop":
+                try:
+                    send(("obs", recorder.drain()))
+                except (BrokenPipeError, OSError):
+                    pass
                 break
             if msg[0] != "run":
                 send(("err", None, f"unknown message {msg[0]!r}"))
                 continue
-            _, idx, bundle = msg
+            idx, bundle = msg[1], msg[2]
+            if len(msg) > 3:            # coordinator clock echo
+                recorder.last_echo = msg[3]
             if actor is not None:
                 action = actor.on_dispatch()
                 if action == "kill":
@@ -141,7 +163,8 @@ def worker_loop(conn, spec, scope: str = "worker:0") -> None:
                 if action == "fail":
                     send(("err", idx,
                           f"chaos: injected failure ({scope}, "
-                          f"dispatch {actor.dispatches})"))
+                          f"dispatch {actor.dispatches})",
+                          recorder.drain()))
                     continue
                 if isinstance(action, tuple):
                     what, seconds = action
@@ -164,12 +187,20 @@ def worker_loop(conn, spec, scope: str = "worker:0") -> None:
                                 verify=bundle.verify)
             except BaseException:  # noqa: BLE001 — bad bundle, worker lives
                 try:
-                    send(("err", idx, traceback.format_exc()))
+                    send(("err", idx, traceback.format_exc(),
+                          recorder.drain()))
                 except (BrokenPipeError, OSError):
                     break             # parent reaped us mid-hang: done
                 continue
+            recorder.record("segment_replay", idx=idx, ttc_s=rep.ttc_s,
+                            n_dispatches=rep.n_dispatches,
+                            mode=rep.mode, n_samples=rep.n_samples)
+            if rep.n_collective_dispatches:
+                recorder.record("collective_leg", idx=idx,
+                                n=rep.n_collective_dispatches,
+                                ici_bytes=rep.emulated_ici_bytes)
             try:
-                send(("ok", idx, rep))
+                send(("ok", idx, rep, recorder.drain()))
             except (BrokenPipeError, OSError):
                 break                 # parent reaped us mid-hang: done
     finally:

@@ -21,13 +21,13 @@ import argparse
 import dataclasses
 import gc
 import json
-import time
 import traceback
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import SHAPES, cell_is_runnable, get_config, list_archs
+from repro.obs import clock as obs_clock
 from repro.configs.run import RunConfig, for_shape
 from repro.core import hlo_analysis
 from repro.launch.mesh import describe, make_production_mesh
@@ -128,7 +128,7 @@ def analyze(lowered, compiled, mesh, meta):
         out["xla_cost"] = {"flops": float(ca.get("flops", -1)),
                            "bytes_accessed": float(ca.get("bytes accessed", -1))}
 
-    t0 = time.time()
+    t0 = obs_clock.now()
     cost = hlo_analysis.analyze_hlo(compiled.as_text())
     out["walker"] = {
         "flops": cost.flops,
@@ -139,7 +139,7 @@ def analyze(lowered, compiled, mesh, meta):
         "collective_total": cost.collective_total,
         "collective_by_axis": hlo_analysis.attribute_axes(
             cost, describe(mesh)),
-        "analysis_s": time.time() - t0,
+        "analysis_s": obs_clock.now() - t0,
         "top_ops": sorted(cost.op_flops.items(), key=lambda kv: -kv[1])[:12],
     }
     out["useful_flops_ratio"] = (
@@ -166,12 +166,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
         mesh = make_production_mesh(multi_pod=multi_pod)
         run = _run_config(shape, overrides, arch=arch)
         record["run_config"] = dataclasses.asdict(run)
-        t0 = time.time()
+        t0 = obs_clock.now()
         lowered, meta = lower_cell(cfg, shape, mesh, run)
-        record["lower_s"] = time.time() - t0
-        t0 = time.time()
+        record["lower_s"] = obs_clock.now() - t0
+        t0 = obs_clock.now()
         compiled = lowered.compile()
-        record["compile_s"] = time.time() - t0
+        record["compile_s"] = obs_clock.now() - t0
         record.update(analyze(lowered, compiled, mesh, meta))
         record["ok"] = True
         del compiled, lowered
@@ -233,12 +233,12 @@ def main():
                 if json.load(f).get("ok"):
                     print(f"[skip] {name}")
                     continue
-        t0 = time.time()
+        t0 = obs_clock.now()
         rec = run_cell(a, s, mp, args.out, overrides or None, args.tag)
         status = "SKIP(" + rec.get("skip_reason", "")[:40] + ")" \
             if rec.get("skipped") else ("ok" if rec["ok"] else
                                         "FAIL " + rec.get("error", "")[:120])
-        print(f"[{time.time()-t0:7.1f}s] {name}: {status}", flush=True)
+        print(f"[{obs_clock.now()-t0:7.1f}s] {name}: {status}", flush=True)
 
 
 if __name__ == "__main__":

@@ -7,6 +7,8 @@
     python -m repro.scenarios fleet --store runs/ --from-store scenario=x \
         --executor remote --host host1:9000 --host host2:9000
     python -m repro.scenarios serve --port 8787
+    python -m repro.scenarios trace training_scan:n_steps=4 --repeat 8 \
+        --workers 2 --kill-every 5 --out /tmp/fleet_trace.json
 
 ``list`` shows every registered generator with its defaults; ``run`` pushes
 one scenario through generate -> predict -> emulate (-> store with
@@ -20,7 +22,13 @@ turns ``--store`` into a profile *source*: matching stored profiles are
 streamed into the fleet alongside (or instead of) generated jobs.
 ``serve`` starts the live traffic emulation service
 (:mod:`repro.service.http`): open-loop load runs against a standing
-fleet, driven and reported over HTTP.
+fleet, driven and reported over HTTP.  ``trace`` replays a (optionally
+chaos-injected) batch on a process fleet with the flight recorder on
+and writes the merged timeline as Chrome trace-event JSON — open the
+file at https://ui.perfetto.dev (or ``chrome://tracing``) to see queue/
+replay spans per worker and fault/scale instants.  ``--window 1`` (the
+default there) serializes dispatch, so a seeded chaos run produces the
+same event sequence every time.
 """
 from __future__ import annotations
 
@@ -163,6 +171,43 @@ def _cmd_serve(args) -> int:
     return 0
 
 
+def _cmd_trace(args) -> int:
+    from repro.fleet import FleetConfig
+    from repro.fleet.chaos import ChaosPolicy
+    from repro.obs.recorder import Event, event_sequence
+    from repro.obs.trace import to_chrome_trace, write_trace
+    from repro.scenarios import run_fleet
+
+    chaos_knobs = {k: v for k, v in (
+        ("kill_every", args.kill_every), ("hang_nth", args.hang_nth),
+        ("fail_nth", args.fail_nth)) if v}
+    chaos = ChaosPolicy(seed=args.chaos_seed, max_faults=args.max_faults,
+                        **chaos_knobs) if chaos_knobs else None
+    config = FleetConfig.process(
+        max_workers=args.workers, window=args.window, chaos=chaos,
+        liveness_timeout=5.0 if chaos is not None else None,
+        on_failure="skip",             # a poison job must still trace
+        max_respawns=max(8, args.workers * 4), timeout=args.timeout)
+    jobs = [_parse_job(j) for j in args.job] * args.repeat
+    out = run_fleet(jobs, config=config, collect="totals")
+    obs = out.fleet.obs
+    events = [Event.from_dict(d) for d in obs.get("events", ())]
+    trace = to_chrome_trace(events, meta={
+        "jobs": args.job, "repeat": args.repeat, "workers": args.workers,
+        "window": args.window, "chaos": repr(chaos),
+        "dropped_events": obs.get("dropped_events", 0)})
+    write_trace(args.out, trace)
+    seq = event_sequence(events)
+    rec = out.fleet.recovery
+    print(f"trace: {len(events)} events ({len(seq)} in the deterministic "
+          f"sequence), {obs.get('dropped_events', 0)} dropped")
+    if rec:
+        print("recovery:", ", ".join(f"{k}={v}" for k, v in rec.items()
+                                     if k != "fault_events"))
+    print(f"wrote {args.out} — open it at https://ui.perfetto.dev")
+    return 0
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.scenarios",
@@ -234,6 +279,31 @@ def main(argv: Optional[List[str]] = None) -> int:
                          "for all) out of --store into the fleet")
     fl.add_argument("--json", action="store_true")
 
+    tr = sub.add_parser("trace",
+                        help="replay a batch with the flight recorder on "
+                             "and export a Perfetto-loadable trace")
+    tr.add_argument("job", nargs="+", metavar="NAME[:k=v,k=v]",
+                    help="scenario job spec (repeatable)")
+    tr.add_argument("--repeat", type=int, default=1, metavar="N",
+                    help="replay the job list N times (default 1)")
+    tr.add_argument("--workers", type=int, default=2)
+    tr.add_argument("--window", type=int, default=1, metavar="N",
+                    help="compile-ahead window (default 1: dispatch is "
+                         "serialized, so a seeded chaos run emits a "
+                         "deterministic event sequence)")
+    tr.add_argument("--kill-every", type=int, default=0, metavar="N",
+                    help="chaos: kill a worker on its every-Nth dispatch")
+    tr.add_argument("--hang-nth", type=int, default=0, metavar="N",
+                    help="chaos: hang a worker on its Nth dispatch")
+    tr.add_argument("--fail-nth", type=int, default=0, metavar="N",
+                    help="chaos: inject a failure on the Nth dispatch")
+    tr.add_argument("--max-faults", type=int, default=0, metavar="N",
+                    help="cap injected faults per worker (0 = unlimited)")
+    tr.add_argument("--chaos-seed", type=int, default=0)
+    tr.add_argument("--timeout", type=float, default=600.0, metavar="S")
+    tr.add_argument("--out", default="fleet_trace.json", metavar="PATH",
+                    help="trace file to write (default fleet_trace.json)")
+
     sv = sub.add_parser("serve",
                         help="start the live traffic emulation service "
                              "(open-loop load runs over HTTP)")
@@ -273,8 +343,13 @@ def main(argv: Optional[List[str]] = None) -> int:
         if not args.job and args.from_store is None:
             ap.error("nothing to replay: give scenario jobs and/or "
                      "--from-store")
+    if args.cmd == "trace":
+        if args.repeat < 1:
+            ap.error("--repeat must be >= 1")
+        if args.window is not None and args.window < 1:
+            ap.error("--window must be >= 1")
     return {"list": _cmd_list, "run": _cmd_run, "fleet": _cmd_fleet,
-            "serve": _cmd_serve}[args.cmd](args)
+            "serve": _cmd_serve, "trace": _cmd_trace}[args.cmd](args)
 
 
 if __name__ == "__main__":

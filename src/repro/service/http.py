@@ -19,7 +19,14 @@ Routes (all GET, all JSON):
 * ``/status?id=N`` — run state; includes the SLO report once finished.
 * ``/stop?id=N`` — stop admitting arrivals; the queue still drains and
   the truncated run reports normally.
-* ``/runs`` — all runs this service has seen.
+* ``/runs`` — all runs this service has seen (schema-tagged
+  ``FleetReport.to_json`` payloads, not ad-hoc dicts).
+* ``/trace?id=N`` — the finished run's merged flight-recorder timeline
+  as Chrome trace-event JSON (load it at https://ui.perfetto.dev); a
+  finished ``/run``/``/status`` response links here.
+* ``/metrics`` — Prometheus text exposition (the one non-JSON route):
+  service-level run/request counters plus the request-latency
+  histogram folded from every finished run's SLO sketch.
 
 Run it: ``python -m repro.service [--port 8787]`` (or
 ``python -m repro.scenarios serve``).
@@ -35,6 +42,9 @@ from urllib.parse import parse_qsl, urlparse
 from repro.core.emulator import Emulator
 from repro.fleet.chaos import ChaosPolicy
 from repro.fleet.config import FleetConfig
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.recorder import Event
+from repro.obs.trace import slo_windows_ms, to_chrome_trace
 from repro.service.arrivals import ARRIVAL_KINDS, arrival_process
 from repro.service.load import LoadReport, run_load
 from repro.service.slo import SLO
@@ -83,6 +93,7 @@ class LoadRunHandle:
             out["error"] = self.error
         if self.report is not None and (full or not self.thread.is_alive()):
             out["report"] = self.report.to_dict()
+            out["trace"] = f"/trace?id={self.run_id}"
         return out
 
 
@@ -95,6 +106,19 @@ class LoadService:
         self._runs: Dict[int, LoadRunHandle] = {}
         self._next_id = 1
         self._lock = threading.Lock()
+        # the /metrics scrape body: service-level series here; per-run
+        # fleet series live in each report's obs snapshot
+        self.metrics = MetricsRegistry()
+        self._m_runs = self.metrics.counter(
+            "repro_service_runs_total", "load runs by terminal state")
+        self._m_active = self.metrics.gauge(
+            "repro_service_runs_active", "driver threads currently running")
+        self._m_requests = self.metrics.counter(
+            "repro_service_requests_total",
+            "requests across finished runs, by outcome")
+        self._m_latency = self.metrics.histogram(
+            "repro_service_request_latency_seconds",
+            "open-loop request latency across finished runs")
 
     # -- query parsing ------------------------------------------------------
 
@@ -169,13 +193,24 @@ class LoadService:
             self._next_id += 1
 
         def drive():
+            self._m_active.inc(1)
             try:
-                handle.report = run_load(
+                report = run_load(
                     self._em, arrivals, config=spec["config"],
                     slo=spec["slo"], window_s=spec["window_s"],
                     time_scale=spec["time_scale"], stop=stop)
+                handle.report = report
+                self._m_runs.inc(state="done")
+                self._m_requests.inc(report.serve.n_ok, outcome="ok")
+                self._m_requests.inc(report.serve.n_skipped,
+                                     outcome="skipped")
+                if report.latency is not None and report.latency.count:
+                    self._m_latency.absorb(report.latency)
             except BaseException as e:  # noqa: BLE001 — reported via /status
                 handle.error = f"{type(e).__name__}: {e}"
+                self._m_runs.inc(state="failed")
+            finally:
+                self._m_active.inc(-1)
 
         public = {k: (repr(v) if k in ("config", "slo") else v)
                   for k, v in spec.items()}
@@ -206,6 +241,20 @@ class LoadService:
     def runs(self) -> Dict:
         with self._lock:
             return {"runs": [h.describe() for h in self._runs.values()]}
+
+    def trace(self, run_id) -> Dict:
+        """A finished run's merged event timeline as a Chrome trace-event
+        object (Perfetto-loadable as-is), SLO windows as counter tracks."""
+        h = self._handle(run_id)
+        if h.report is None:
+            raise ValueError(f"run {run_id} has no report yet "
+                             f"(state {h.state!r})")
+        obs = h.report.serve.obs or {}
+        events = [Event.from_dict(d) for d in obs.get("events", ())]
+        return to_chrome_trace(
+            events, slo_windows=slo_windows_ms(h.report.slo),
+            meta={"run_id": h.run_id, "spec": h.spec,
+                  "dropped_events": obs.get("dropped_events", 0)})
 
     def shutdown(self, timeout: float = 30.0):
         """Stop every live run and wait for their driver threads."""
@@ -241,6 +290,8 @@ class LoadService:
             return self.stop(q.get("id"))
         if route == "/runs":
             return self.runs()
+        if route == "/trace":
+            return self.trace(q.get("id"))
         raise KeyError(f"no route {route!r}")
 
 
@@ -254,6 +305,16 @@ def make_server(host: str = "127.0.0.1", port: int = 8787,
 
     class Handler(BaseHTTPRequestHandler):
         def do_GET(self):  # noqa: N802 — BaseHTTPRequestHandler contract
+            if urlparse(self.path).path.rstrip("/") == "/metrics":
+                # the one non-JSON route: Prometheus text exposition
+                payload = service.metrics.render().encode()
+                self.send_response(200)
+                self.send_header("Content-Type",
+                                 "text/plain; version=0.0.4; charset=utf-8")
+                self.send_header("Content-Length", str(len(payload)))
+                self.end_headers()
+                self.wfile.write(payload)
+                return
             try:
                 body, code = service.route(self.path), 200
             except KeyError as e:

@@ -22,6 +22,7 @@ from dataclasses import dataclass, field
 from typing import Dict, Optional
 
 from repro.fleet.config import FleetConfig
+from repro.obs import clock as obs_clock
 from repro.service.arrivals import ArrivalProcess
 from repro.service.slo import SLO, SLOEngine
 from repro.service.standing import ServeResult, StandingFleet
@@ -42,20 +43,35 @@ class LoadReport:
     wall_s: float
     stopped: bool = False          # True: cut short by a stop event
     meta: Dict = field(default_factory=dict)
+    #: the run's overall LatencySketch (``SLOEngine.overall``) — folds
+    #: into the service's /metrics histogram without re-observing
+    latency: object = None
+
+    #: schema version of ``to_dict``; bump on any breaking field change
+    SCHEMA = 1
 
     def to_dict(self) -> Dict:
-        """JSON-ready summary (per-request records elided)."""
+        """JSON-ready summary with a stable schema tag.
+
+        Per-request records are elided; the fleet side goes through the
+        one versioned serialization (``ServeResult.fleet_report()`` →
+        ``FleetReport.to_json``) instead of a hand-built dict.  The obs
+        event timeline is bulky and served by ``/trace`` — here it is
+        reduced to its counts."""
+        fleet = self.serve.fleet_report().to_json(reports=False)
+        obs = dict(fleet.get("obs") or {})
+        if "events" in obs:
+            obs["n_events"] = len(obs.pop("events"))
+        fleet["obs"] = obs
         return {
+            "schema": self.SCHEMA,
             "n_arrivals": self.n_arrivals,
             "time_scale": self.time_scale,
             "wall_s": self.wall_s,
             "stopped": self.stopped,
             "n_ok": self.serve.n_ok,
             "n_skipped": self.serve.n_skipped,
-            "totals": repr(self.serve.totals),
-            "scaling": self.serve.scaling,
-            "recovery": {k: v for k, v in self.serve.recovery.items()
-                         if k != "fault_events"},
+            "fleet": fleet,
             "slo": self.slo,
             "meta": self.meta,
         }
@@ -101,11 +117,11 @@ def run_load(emulator, arrivals: ArrivalProcess, *,
     stopped = False
     n = 0
     try:
-        t0 = t0_box["t0"] = time.monotonic()
+        t0 = t0_box["t0"] = obs_clock.now()
         for a in arrivals:
             due = t0 + a.t / time_scale
             while True:
-                lag = due - time.monotonic()
+                lag = due - obs_clock.now()
                 if lag <= 0:
                     break
                 if stop is not None and stop.wait(min(lag, 0.1)):
@@ -128,7 +144,8 @@ def run_load(emulator, arrivals: ArrivalProcess, *,
             engine.fault(opened - t0, repaired - t0)
         return LoadReport(slo=engine.report(), serve=serve, n_arrivals=n,
                           time_scale=time_scale,
-                          wall_s=time.monotonic() - t0, stopped=stopped)
+                          wall_s=obs_clock.now() - t0, stopped=stopped,
+                          latency=engine.overall)
     finally:
         unsubscribe()
         if owns:

@@ -32,14 +32,14 @@ from __future__ import annotations
 
 import queue
 import threading
-import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
-from repro.core.emulator import EmulationReport, ReportFold
+from repro.core.emulator import EmulationReport, FleetReport, ReportFold
 from repro.fleet.bundle import ScheduleBundle, bundle_profile
 from repro.fleet.config import FleetConfig
 from repro.fleet.executor import BundleTiming
+from repro.obs import clock as obs_clock
 
 _CLOSE = object()          # inbox sentinel: end the current serve session
 
@@ -47,7 +47,7 @@ _CLOSE = object()          # inbox sentinel: end the current serve session
 @dataclass
 class RequestRecord:
     """One submitted request's lifecycle, as the serve layer saw it.
-    ``submitted``/``done`` are ``time.monotonic`` stamps; ``timing`` is
+    ``submitted``/``done`` are ``repro.obs.clock`` stamps; ``timing`` is
     the executor's per-bundle view (None until the bundle finishes —
     and permanently None for requests consumed by a raised stream)."""
 
@@ -74,6 +74,23 @@ class ServeResult:
     wall_s: float
     scaling: Dict = field(default_factory=dict)
     recovery: Dict = field(default_factory=dict)
+    #: observability snapshot (``FleetBase.obs_snapshot``): the merged
+    #: flight-recorder timeline, drop accounting, and a metrics snapshot
+    obs: Dict = field(default_factory=dict)
+
+    def fleet_report(self) -> FleetReport:
+        """This serve session reshaped as the executor's
+        :class:`FleetReport` — the one versioned serialization
+        (``to_json``, schema-tagged) the service layer ships.  The serve
+        layer does not retain per-request ``EmulationReport``s, so
+        ``reports`` is empty; totals, scaling, recovery and the obs
+        snapshot carry the session."""
+        return FleetReport(
+            reports=[], wall_s=self.wall_s, serial_s=self.serial_s,
+            max_workers=int(self.scaling.get("peak_workers", 0) or 0),
+            totals=self.totals, n_replayed=self.n_ok,
+            scaling=dict(self.scaling), recovery=dict(self.recovery),
+            obs=dict(self.obs))
 
 
 class StandingFleet:
@@ -177,7 +194,7 @@ class StandingFleet:
             self._next_idx += 1
             self._records[idx] = RequestRecord(
                 idx=idx, command=bundle.command,
-                submitted=time.monotonic(), meta=meta)
+                submitted=obs_clock.now(), meta=meta)
         self._inbox.put(bundle)
         return idx
 
@@ -231,7 +248,7 @@ class StandingFleet:
         self._fold = ReportFold(keep_reports=False)
         self._next_idx = 0
         self._error = None
-        self._session_t0 = time.perf_counter()
+        self._session_t0 = obs_clock.now()
         self._pump = threading.Thread(target=self._run, name="standing-pump",
                                       args=(self._records, self._fold),
                                       daemon=True)
@@ -269,7 +286,7 @@ class StandingFleet:
                 record_timing=self._note_timing(records))
             for idx, rep in results:
                 rec = records[idx]
-                rec.done = time.monotonic()
+                rec.done = obs_clock.now()
                 rec.ok = rep is not None
                 if rep is None:
                     fold.skip(idx)
@@ -287,6 +304,10 @@ class StandingFleet:
             records=records, totals=self._fold.totals,
             serial_s=self._fold.serial_s, n_ok=self._fold.n_done,
             n_skipped=self._fold.n_skipped,
-            wall_s=time.perf_counter() - self._session_t0,
+            wall_s=obs_clock.now() - self._session_t0,
             scaling=dict(self._fleet.last_scaling),
-            recovery=dict(self._fleet.last_recovery))
+            recovery=dict(self._fleet.last_recovery),
+            # injected test fleets may predate the recorder: obs is then
+            # honestly empty rather than a fabricated snapshot
+            obs=(self._fleet.obs_snapshot()
+                 if hasattr(self._fleet, "obs_snapshot") else {}))

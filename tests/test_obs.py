@@ -1,0 +1,479 @@
+"""Flight recorder + distributed trace/metrics layer (ISSUE 9 contracts).
+
+Fast tests pin the observability primitives in-process: the one clock
+domain (monotonic stamps, anchored wall projection, NTP-style per-peer
+offset estimation with min-RTT sample selection and multi-hop
+composition), the flight recorder's deterministic per-(scope, kind)
+ordinals and never-silent ring truncation, frame shipping with
+clock-domain rebase on absorb, the Chrome trace-event exporter (a
+requeued bundle shows two replay spans, the second on its rescue
+worker; strict Perfetto-schema validation), the Prometheus text-format
+registry (render/parse round-trip, cumulative-bucket invariants,
+cross-geometry sketch absorption), and the versioned
+``FleetReport.to_json``/``from_json`` round-trip the service layer
+serves.
+
+Subprocess tests (``slow`` + ``subproc``) pin the acceptance contract
+on real workers: a seeded 2-worker chaos storm exports a
+Perfetto-loadable trace showing the fault instant and the killed
+bundle's second dispatch span, and rerunning the same seed yields an
+identical event sequence (kinds+scopes+ordinals; timestamps excluded).
+"""
+import json
+import pickle
+
+import pytest
+
+from repro.core import Emulator, ResourceVector, Sample, SynapseProfile
+from repro.core.emulator import FleetReport
+from repro.fleet import ChaosPolicy, FleetConfig
+from repro.obs import clock
+from repro.obs.metrics import Histogram, MetricsRegistry, parse_promtext
+from repro.obs.recorder import (TIMER_KINDS, Event, FlightRecorder,
+                                ObsFrame, event_sequence)
+from repro.obs.trace import (slo_windows_ms, to_chrome_trace,
+                             validate_trace, write_trace)
+
+TILE = 64
+BLOCK = 1 << 18
+FPI = 2.0 * TILE ** 3
+BPI = 2.0 * BLOCK
+
+
+def _em(**kw):
+    return Emulator(compute_tile=TILE, mem_block=BLOCK, **kw)
+
+
+def _rv(flops=0.0, hbm=0.0):
+    return ResourceVector(flops=flops, hbm_bytes=hbm)
+
+
+def _profile(rvs, command="obs-test"):
+    return SynapseProfile(command=command,
+                          samples=[Sample(index=i, resources=r)
+                                   for i, r in enumerate(rvs)])
+
+
+# ---------------------------------------------------------------------------
+# clock domain (fast, pure)
+# ---------------------------------------------------------------------------
+
+def test_clock_now_monotonic_and_wall_anchored():
+    t1 = clock.now()
+    t2 = clock.now()
+    assert t2 >= t1
+    # wall() is a rigid shift of the monotonic clock: differences match
+    # (to float rounding at wall-epoch magnitude), so a wall-clock step
+    # can never corrupt a duration.
+    assert clock.wall(t2) - clock.wall(t1) == pytest.approx(t2 - t1,
+                                                           abs=1e-5)
+    mono, wall = clock.anchor()
+    assert clock.wall(mono) == pytest.approx(wall)
+
+
+def test_clock_sync_estimates_known_offset():
+    sync = clock.ClockSync()
+    assert not sync.synced
+    # Remote clock runs 5.0 ahead; symmetric 0.2s round trip.  The peer
+    # read its clock at local midpoint 10.1, reporting 15.1.
+    sync.observe(t_sent=10.0, t_remote=15.1, t_recv=10.2)
+    assert sync.synced
+    assert sync.offset == pytest.approx(5.0)
+    assert sync.rtt == pytest.approx(0.2)
+    assert sync.to_local(15.1) == pytest.approx(10.1)
+
+
+def test_clock_sync_keeps_min_rtt_sample():
+    sync = clock.ClockSync()
+    sync.observe(10.0, 15.1, 10.2)                 # rtt 0.2, offset 5.0
+    # A congested echo (asymmetric delay skews the midpoint estimate)
+    # must not displace the tighter sample.
+    sync.observe(20.0, 27.0, 21.0)                 # rtt 1.0, offset 6.5
+    assert sync.offset == pytest.approx(5.0)
+    assert sync.rtt == pytest.approx(0.2)
+    assert sync.samples == 2
+    # ...but a tighter echo refines the estimate.
+    sync.observe(30.0, 35.05, 30.1)                # rtt 0.1
+    assert sync.offset == pytest.approx(5.0)
+    assert sync.rtt == pytest.approx(0.1)
+
+
+def test_clock_sync_composes_across_hops():
+    """worker -> agent -> coordinator: rebasing through each hop's sync
+    in turn lands a worker stamp on the coordinator timeline."""
+    agent_from_worker = clock.ClockSync()
+    agent_from_worker.observe(100.0, 100.0 + 7.0, 100.0)   # worker = agent+7
+    coord_from_agent = clock.ClockSync()
+    coord_from_agent.observe(50.0, 50.0 + 3.0, 50.0)       # agent = coord+3
+    t_worker = 123.0
+    t_coord = coord_from_agent.to_local(agent_from_worker.to_local(t_worker))
+    assert t_coord == pytest.approx(123.0 - 7.0 - 3.0)
+
+
+def test_clock_sync_rides_in_reports():
+    sync = clock.ClockSync()
+    sync.observe(10.0, 15.1, 10.2)
+    d = pickle.loads(pickle.dumps(sync)).to_dict()
+    assert d == {"offset": pytest.approx(5.0), "rtt": pytest.approx(0.2),
+                 "samples": 1}
+    json.dumps(d)
+
+
+# ---------------------------------------------------------------------------
+# flight recorder (fast, pure)
+# ---------------------------------------------------------------------------
+
+def test_recorder_ordinals_per_scope_kind():
+    rec = FlightRecorder("coordinator")
+    e1 = rec.record("dispatch", idx=0)
+    e2 = rec.record("dispatch", idx=1)
+    e3 = rec.record("done", idx=0)
+    e4 = rec.record("dispatch", scope="worker:0", idx=2)
+    assert (e1.ordinal, e2.ordinal) == (1, 2)
+    assert e3.ordinal == 1                      # independent (scope, kind)
+    assert e4.ordinal == 1                      # foreign scope stream
+    # eid is a pure function of identity: two recorders emitting the
+    # same sequence mint the same ids (the determinism contract).
+    rec2 = FlightRecorder("coordinator")
+    assert rec2.record("dispatch", idx=9).eid == e1.eid
+
+
+def test_recorder_ring_truncation_never_silent():
+    rec = FlightRecorder("w", capacity=4)
+    for i in range(10):
+        rec.record("dispatch", idx=i)
+    assert len(rec) == 4
+    assert rec.dropped_events == 6
+    assert [e.get("idx") for e in rec.events()] == [6, 7, 8, 9]
+    assert rec.snapshot()["dropped_events"] == 6
+    # drain carries the lifetime count for the receiver to account
+    frame = rec.drain()
+    assert frame.dropped == 6
+    assert len(rec) == 0
+    with pytest.raises(ValueError, match="capacity"):
+        FlightRecorder("w", capacity=0)
+
+
+def test_recorder_absorb_rebases_and_accounts_foreign_drops():
+    worker = FlightRecorder("worker:0")
+    worker.record("segment_replay", t=1000.0, idx=3, ttc_s=0.5)
+    worker.record("segment_replay", t=1001.0, idx=4, ttc_s=0.25)
+    worker.dropped_events = 2                   # pretend its ring wrapped
+    frame = worker.drain()
+
+    sync = clock.ClockSync()
+    sync.observe(10.0, 1010.0, 10.0)            # worker clock = local+1000
+    coord = FlightRecorder("coordinator")
+    coord.record("dispatch", t=0.5, idx=3)
+    coord.absorb(frame, to_local=sync.to_local)
+
+    ts = {e.get("idx"): e.t for e in coord.events()
+          if e.kind == "segment_replay"}
+    assert ts[3] == pytest.approx(0.0)          # 1000.0 rebased
+    assert ts[4] == pytest.approx(1.0)
+    # foreign ordinals/eids survive the move; drops aggregate
+    seq = event_sequence(coord.events())
+    assert ("worker:0", "segment_replay", 1) in seq
+    assert ("worker:0", "segment_replay", 2) in seq
+    assert coord.dropped_events == 0
+    assert coord.total_dropped == 2
+    # re-reporting the same origin is idempotent (max, not sum)
+    coord.absorb(ObsFrame(scope="worker:0", dropped=2))
+    assert coord.total_dropped == 2
+
+
+def test_event_and_frame_round_trip():
+    rec = FlightRecorder("worker:1")
+    ev = rec.record("requeue", idx=7, reason="died")
+    d = ev.to_dict()
+    json.dumps(d)
+    ev2 = Event.from_dict(d)
+    assert ev2 == ev
+    assert ev2.get("reason") == "died"
+    assert ev2.get("missing", "dflt") == "dflt"
+    frame = pickle.loads(pickle.dumps(rec.drain(echo_t=42.0)))
+    assert frame.scope == "worker:1"
+    assert frame.events == (ev,)
+    assert frame.echo_t == 42.0
+
+
+def test_event_sequence_excludes_wall_driven_kinds():
+    rec = FlightRecorder("coordinator")
+    rec.record("dispatch", idx=0)
+    rec.record("fault_opened", scope="worker:0")
+    for kind in sorted(TIMER_KINDS):
+        rec.record(kind)
+    seq = event_sequence(rec.events())
+    assert seq == [("coordinator", "dispatch", 1),
+                   ("worker:0", "fault_opened", 1)]
+    # the projection is sorted, so arrival order can't leak in
+    assert seq == sorted(seq)
+
+
+# ---------------------------------------------------------------------------
+# trace export (fast, pure)
+# ---------------------------------------------------------------------------
+
+def _storm_events():
+    """Synthetic merged timeline: bundle 0 sails through; bundle 1 is
+    dispatched to worker:0, the worker dies mid-replay, the bundle is
+    requeued and rescued by worker:1."""
+    rec = FlightRecorder("coordinator")
+    rec.record("enqueue", t=0.0, idx=0)
+    rec.record("dispatch", t=0.1, idx=0, peer="worker:0", attempt=1)
+    rec.record("enqueue", t=0.2, idx=1)
+    rec.record("dispatch", t=0.3, idx=1, peer="worker:0", attempt=1)
+    rec.record("done", t=0.4, idx=0)
+    rec.record("fault_opened", t=0.5, scope="worker:0")
+    rec.record("requeue", t=0.5, idx=1, reason="died")
+    rec.record("fault_repaired", t=0.9, scope="worker:0", mttr_s=0.4)
+    rec.record("dispatch", t=1.0, idx=1, peer="worker:1", attempt=2)
+    rec.record("segment_replay", t=1.4, scope="worker:1", idx=1, ttc_s=0.4)
+    rec.record("done", t=1.5, idx=1)
+    return rec.events()
+
+
+def test_trace_requeued_bundle_shows_two_replay_spans():
+    trace = to_chrome_trace(_storm_events())
+    validate_trace(trace)
+    replay = [t for t in trace["traceEvents"] if t.get("cat") == "replay"]
+    b1 = sorted((t for t in replay if t["args"]["idx"] == 1),
+                key=lambda t: t["ts"])
+    assert len(b1) == 2
+    assert b1[0]["args"]["outcome"] == "requeue"
+    assert b1[1]["args"]["outcome"] == "done"
+    assert b1[1]["args"]["attempt"] == 2
+    # the spans land on the serving worker's track, not the coordinator's
+    names = {t["tid"]: t["args"]["name"] for t in trace["traceEvents"]
+             if t["ph"] == "M" and t["name"] == "thread_name"}
+    assert names[b1[0]["tid"]] == "worker:0"
+    assert names[b1[1]["tid"]] == "worker:1"
+    # queue spans (one per enqueue/requeue->dispatch) sit on coordinator
+    queue = [t for t in trace["traceEvents"] if t.get("cat") == "queue"
+             and t["ph"] == "X"]
+    assert all(names[t["tid"]] == "coordinator" for t in queue)
+    assert len([t for t in queue if t["args"]["idx"] == 1]) == 2
+    # fault instants present with global scope
+    faults = [t for t in trace["traceEvents"] if t.get("cat") == "fault"]
+    assert {t["name"] for t in faults} == {"fault_opened", "fault_repaired"}
+    assert all(t["s"] == "g" for t in faults)
+
+
+def test_trace_slo_counter_track_and_write(tmp_path):
+    windows = slo_windows_ms({"windows": [
+        {"t0": 0.0, "p50": 0.010, "p99": 0.020, "p999": 0.500},
+        {"t0": 0.5, "p50": 0.011, "p99": 0.025, "p999": 0.030},
+    ]})
+    assert windows[0]["p999_ms"] == pytest.approx(500.0)
+    trace = to_chrome_trace(_storm_events(), slo_windows=windows,
+                            meta={"run": "t"})
+    counters = [t for t in trace["traceEvents"] if t["ph"] == "C"]
+    assert len(counters) == 2
+    assert counters[0]["args"]["p999_ms"] == pytest.approx(500.0)
+    assert trace["metadata"] == {"run": "t"}
+    path = write_trace(str(tmp_path / "trace.json"), trace)
+    with open(path) as f:
+        validate_trace(json.load(f))
+    assert slo_windows_ms({}) == []
+
+
+def test_validate_trace_rejects_malformed():
+    with pytest.raises(ValueError, match="traceEvents"):
+        validate_trace({"events": []})
+    with pytest.raises(ValueError, match="unsupported ph"):
+        validate_trace({"traceEvents": [{"name": "x", "ph": "B", "pid": 1,
+                                         "tid": 0, "ts": 0.0}]})
+    with pytest.raises(ValueError, match="missing 'dur'"):
+        validate_trace({"traceEvents": [{"name": "x", "ph": "X", "pid": 1,
+                                         "tid": 0, "ts": 0.0}]})
+    with pytest.raises(ValueError, match="negative dur"):
+        validate_trace({"traceEvents": [{"name": "x", "ph": "X", "pid": 1,
+                                         "tid": 0, "ts": 0.0, "dur": -1.0}]})
+    with pytest.raises(ValueError, match="bad instant scope"):
+        validate_trace({"traceEvents": [{"name": "x", "ph": "i", "pid": 1,
+                                         "tid": 0, "ts": 0.0, "s": "z"}]})
+
+
+# ---------------------------------------------------------------------------
+# metrics registry + promtext (fast, pure)
+# ---------------------------------------------------------------------------
+
+def test_metrics_render_parse_round_trip():
+    reg = MetricsRegistry()
+    runs = reg.counter("repro_runs_total", "runs by state")
+    runs.inc(state="done")
+    runs.inc(2, state="failed")
+    active = reg.gauge("repro_active", "in flight")
+    active.set(3)
+    lat = reg.histogram("repro_latency_seconds", "request latency")
+    for v in (0.002, 0.01, 0.3, 7.0):
+        lat.observe(v)
+    text = reg.render()
+    fams = parse_promtext(text)
+    assert fams["repro_runs_total"]["type"] == "counter"
+    samples = fams["repro_runs_total"]["samples"]
+    assert samples[("repro_runs_total", '{state="done"}')] == 1.0
+    assert samples[("repro_runs_total", '{state="failed"}')] == 2.0
+    assert fams["repro_active"]["samples"][("repro_active", "")] == 3.0
+    hist = fams["repro_latency_seconds"]["samples"]
+    assert hist[("repro_latency_seconds_count", "")] == 4.0
+    assert hist[("repro_latency_seconds_sum", "")] == pytest.approx(7.312)
+    inf = hist[("repro_latency_seconds_bucket", '{le="+Inf"}')]
+    assert inf == 4.0
+    # counters refuse to go down; kind conflicts are loud
+    with pytest.raises(ValueError, match="only go up"):
+        runs.inc(-1)
+    with pytest.raises(ValueError, match="already registered"):
+        reg.gauge("repro_runs_total")
+    with pytest.raises(ValueError, match="invalid metric name"):
+        reg.counter("0bad")
+
+
+def test_parse_promtext_is_strict():
+    with pytest.raises(ValueError, match="before its TYPE"):
+        parse_promtext("orphan_metric 1\n")
+    with pytest.raises(ValueError, match="malformed sample"):
+        parse_promtext("# TYPE m counter\nm\n")
+    with pytest.raises(ValueError, match="malformed labels"):
+        parse_promtext("# TYPE m counter\nm{x=} 1\n")
+    with pytest.raises(ValueError, match="unknown type"):
+        parse_promtext("# TYPE m rate\n")
+    with pytest.raises(ValueError, match="bad value"):
+        parse_promtext("# TYPE m counter\nm notanumber\n")
+    with pytest.raises(ValueError, match=r"missing le=.\+Inf"):
+        parse_promtext('# TYPE h histogram\nh_bucket{le="1"} 1\n'
+                       "h_sum 1\nh_count 1\n")
+    with pytest.raises(ValueError, match="non-cumulative"):
+        parse_promtext('# TYPE h histogram\nh_bucket{le="1"} 5\n'
+                       'h_bucket{le="+Inf"} 3\nh_sum 1\nh_count 3\n')
+    with pytest.raises(ValueError, match="_count"):
+        parse_promtext('# TYPE h histogram\nh_bucket{le="1"} 1\n'
+                       'h_bucket{le="+Inf"} 2\nh_sum 1\nh_count 3\n')
+
+
+def test_histogram_absorbs_finer_sketch():
+    """The quantile-grade SLO sketch (growth 1.05, ~450 buckets) folds
+    into the coarse scrape histogram count-exact with the sum carried
+    from the sketch's exact total."""
+    from repro.service.slo import LatencySketch
+    fine = LatencySketch(1e-6, 3600.0, 1.05)
+    values = [0.0005, 0.003, 0.02, 0.9, 5000.0]   # under, interior, over
+    for v in values:
+        fine.add(v)
+    h = Histogram("repro_req_seconds")
+    h.absorb(fine)
+    fams = parse_promtext("# TYPE repro_req_seconds histogram\n" +
+                          "\n".join(h.render()[2:]) + "\n")
+    samples = fams["repro_req_seconds"]["samples"]
+    assert samples[("repro_req_seconds_count", "")] == len(values)
+    assert samples[("repro_req_seconds_sum", "")] == pytest.approx(
+        sum(values))
+    sk = h.sketch()
+    assert sk.min == pytest.approx(0.0005)
+    assert sk.max == pytest.approx(5000.0)
+    # a second absorb accumulates (count-exact under repetition)
+    h.absorb(fine)
+    assert h.sketch().count == 2 * len(values)
+    # matching geometry takes the exact-merge path
+    same = Histogram("m2")
+    same.observe(0.01)
+    from repro.service.slo import LatencySketch as LS
+    peer = LS(1e-3, 3600.0, 2.0)
+    peer.add(0.02)
+    same.absorb(peer)
+    assert same.sketch().count == 2
+
+
+# ---------------------------------------------------------------------------
+# versioned report serialization (fast, pure)
+# ---------------------------------------------------------------------------
+
+def test_fleet_report_json_round_trip():
+    rep = FleetReport(
+        reports=[], wall_s=1.5, serial_s=3.0, max_workers=2,
+        totals=ResourceVector(flops=FPI, hbm_bytes=BPI),
+        n_samples=4, n_replayed=2,
+        scaling={"peak_workers": 2, "scale_ups": 1},
+        recovery={"worker_deaths": 1, "requeued": 1,
+                  "fault_events": [("worker:0", 0.5, "died")]},
+        obs={"schema": 1, "scope": "coordinator", "events": [],
+             "dropped_events": 0})
+    d = rep.to_json(reports=False)
+    assert d["schema"] == FleetReport.SCHEMA
+    s = json.dumps(d)                  # tuples must have become lists
+    rt = FleetReport.from_json(json.loads(s))
+    assert rt.wall_s == rep.wall_s
+    assert rt.totals.flops == pytest.approx(FPI)
+    assert rt.scaling == rep.scaling
+    assert rt.recovery["fault_events"] == [("worker:0", 0.5, "died")]
+    assert rt.obs == rep.obs
+    assert rt.n_replayed == 2
+    with pytest.raises(ValueError, match="schema"):
+        FleetReport.from_json({**d, "schema": 99})
+    with pytest.raises(ValueError, match="schema"):
+        FleetReport.from_json({k: v for k, v in d.items() if k != "schema"})
+
+
+# ---------------------------------------------------------------------------
+# seeded chaos storm: deterministic sequence + loadable trace
+# (slow, subprocess)
+# ---------------------------------------------------------------------------
+
+def _storm_config():
+    return FleetConfig.process(
+        max_workers=2, window=1,     # window=1: deterministic dispatch
+        chaos=ChaosPolicy(seed=3, kill_every=5, max_faults=1),
+        liveness_timeout=5.0, on_failure="skip", max_respawns=8,
+        timeout=300.0)
+
+
+def _run_storm():
+    em = _em()
+    profs = [_profile([_rv(flops=FPI)] * 2, command=f"job{i}")
+             for i in range(8)]
+    return em.emulate_many(profs, config=_storm_config(),
+                           collect="totals")
+
+
+@pytest.mark.slow
+@pytest.mark.subproc
+def test_chaos_storm_trace_is_deterministic_and_loadable(tmp_path):
+    out = _run_storm()
+    assert out.recovery["worker_deaths"] >= 1
+    assert out.n_replayed == 8
+    obs = out.obs
+    assert obs["schema"] == 1
+    events = [Event.from_dict(d) for d in obs["events"]]
+    assert obs["dropped_events"] == 0           # 8 bundles fit the ring
+
+    # worker-side events shipped home and merged onto the timeline
+    scopes = {e.scope for e in events}
+    assert any(s.startswith("worker:") for s in scopes)
+    assert any(e.kind == "segment_replay" for e in events)
+    assert any(e.kind == "fault_opened" for e in events)
+
+    # the killed bundle shows two dispatch (replay) spans in the trace
+    trace = to_chrome_trace(events, meta={"test": "storm"})
+    path = write_trace(str(tmp_path / "storm.json"), trace)
+    with open(path) as f:
+        validate_trace(json.load(f))
+    per_idx = {}
+    for t in trace["traceEvents"]:
+        if t.get("cat") == "replay":
+            per_idx.setdefault(t["args"]["idx"], []).append(t)
+    rescued = {i: s for i, s in per_idx.items() if len(s) > 1}
+    assert rescued, "killed bundle must show a second dispatch span"
+    assert any(t["name"] == "fault_opened" for t in trace["traceEvents"])
+
+    # same seed, same shape -> same event sequence (identity only;
+    # timestamps differ every run)
+    out2 = _run_storm()
+    events2 = [Event.from_dict(d) for d in out2.obs["events"]]
+    assert event_sequence(events) == event_sequence(events2)
+    # and the metrics snapshot agrees with the recovery record
+    metrics = obs.get("metrics", {})
+    if metrics:
+        deaths = metrics.get("repro_fleet_worker_deaths_total",
+                             {}).get("series", {})
+        if deaths:
+            assert sum(deaths.values()) == out.recovery["worker_deaths"]
