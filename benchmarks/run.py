@@ -35,6 +35,7 @@ def main() -> None:
         # `--only fleet` doesn't drag the soak/chaos legs along
         ("soak", bench_fleet.soak),
         ("chaos", bench_fleet.chaos),
+        ("dag", bench_fleet.dag),
         ("service", bench_service.main),
     ]
     for name, fn in suite:

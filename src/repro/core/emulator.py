@@ -151,6 +151,10 @@ class FleetReport:
     ``obs`` is the observability snapshot (``repro.obs``): the merged
     flight-recorder timeline (bounded), drop accounting, and a metrics
     snapshot — populated by the ``FleetBase`` executors.
+    ``dag`` is the critical-path accounting of a dependency-structured
+    run (``critical_path_s``/``makespan_s``/``sum_work_s``/
+    ``parallelism``/``critical_nodes``/per-node ``slack_s`` — see
+    ``repro.fleet.dag.critical_path``); empty for linear runs.
     """
     reports: List[EmulationReport]
     wall_s: float                        # concurrent fleet wall time
@@ -163,6 +167,7 @@ class FleetReport:
     scaling: Dict[str, int] = field(default_factory=dict)
     recovery: Dict = field(default_factory=dict)
     obs: Dict = field(default_factory=dict)
+    dag: Dict = field(default_factory=dict)
 
     @property
     def n_profiles(self) -> int:
@@ -191,6 +196,10 @@ class FleetReport:
             out["scaling"] = dict(self.scaling)
         if self.recovery:
             out["recovery"] = dict(self.recovery)
+        if self.dag:
+            out["critical_path_s"] = self.dag.get("critical_path_s")
+            out["makespan_s"] = self.dag.get("makespan_s")
+            out["parallelism"] = self.dag.get("parallelism")
         return out
 
     #: schema version of ``to_json``; bump on any breaking field change
@@ -207,6 +216,10 @@ class FleetReport:
         rec = dict(self.recovery)
         if "fault_events" in rec:
             rec["fault_events"] = [list(fe) for fe in rec["fault_events"]]
+        dag = dict(self.dag)
+        if "slack_s" in dag:
+            # JSON object keys are strings; from_json restores the ints
+            dag["slack_s"] = {str(k): v for k, v in dag["slack_s"].items()}
         return {
             "schema": self.SCHEMA,
             "reports": ([r.to_dict() for r in self.reports]
@@ -218,7 +231,7 @@ class FleetReport:
                        else self.totals.to_dict()),
             "n_samples": self.n_samples, "n_replayed": self.n_replayed,
             "scaling": dict(self.scaling), "recovery": rec,
-            "obs": self.obs,
+            "obs": self.obs, "dag": dag,
         }
 
     @classmethod
@@ -231,6 +244,9 @@ class FleetReport:
         rec = dict(d.get("recovery", {}))
         if "fault_events" in rec:
             rec["fault_events"] = [tuple(fe) for fe in rec["fault_events"]]
+        dag = dict(d.get("dag", {}))
+        if "slack_s" in dag:
+            dag["slack_s"] = {int(k): v for k, v in dag["slack_s"].items()}
         return cls(
             reports=[EmulationReport.from_dict(r)
                      for r in d.get("reports", ())],
@@ -242,7 +258,7 @@ class FleetReport:
             n_samples=d.get("n_samples", 0),
             n_replayed=d.get("n_replayed", 0),
             scaling=dict(d.get("scaling", {})), recovery=rec,
-            obs=dict(d.get("obs", {})))
+            obs=dict(d.get("obs", {})), dag=dag)
 
 
 class ReportFold:
@@ -270,6 +286,7 @@ class ReportFold:
         self.serial_s = 0.0
         self.n_done = 0
         self.n_skipped = 0
+        self.n_skipped_ancestor = 0
         self._next = 0
         self._pending: Dict[int, EmulationReport] = {}
         self._holes: set = set()
@@ -278,12 +295,17 @@ class ReportFold:
         self._pending[idx] = report
         self._drain()
 
-    def skip(self, idx: int) -> None:
+    def skip(self, idx: int, *, ancestor: bool = False) -> None:
         """Index ``idx`` will never arrive (degraded-mode skip): fold past
         the hole so later indices still aggregate in order — without this
         one skipped bundle would stall the fold and buffer the rest of the
-        stream."""
+        stream.  ``ancestor=True`` marks a *cascade* hole — a bundle
+        skipped because an ancestor in its dependency chain was, not
+        because it failed itself — tallied separately in
+        ``n_skipped_ancestor`` (always also counted in ``n_skipped``)."""
         self.n_skipped += 1
+        if ancestor:
+            self.n_skipped_ancestor += 1
         self._holes.add(idx)
         self._drain()
 
@@ -678,6 +700,14 @@ class Emulator:
         order, so they are bit-identical however the fleet is shaped.  A
         sized ``profiles`` caps the pool at ``len(profiles)`` so tiny
         fleets don't spawn idle workers.
+
+        ``profiles`` may also be a ``repro.scenarios.WorkloadDag``
+        (anything exposing ``parents_map``): the fleet then honors the
+        dependency edges — a node dispatches only after every parent's
+        result lands — and the report's ``dag`` dict carries
+        critical-path accounting.  DAGs need the process/remote
+        executors (the frontier scheduler lives in ``FleetBase.stream``)
+        and ``collect="reports"``; both are validated loudly here.
         """
         from repro.fleet.config import FleetConfig
         cfg = FleetConfig.fold(
@@ -689,6 +719,15 @@ class Emulator:
         if collect not in ("reports", "totals"):
             raise ValueError("collect must be 'reports' (keep per-profile "
                              "reports) or 'totals' (fold aggregates only)")
+        is_dag = hasattr(profiles, "parents_map")
+        if (is_dag or cfg.dag) and cfg.executor == "thread":
+            raise ValueError(
+                "dependency-structured workloads (WorkloadDag, or "
+                "FleetConfig(dag=True)) need executor='process' or "
+                "'remote': the frontier scheduler lives in the fleet "
+                "executors — the in-process thread pool has no dispatch "
+                "gating.  Use FleetConfig.process(...) or .remote(...)")
+        cfg.check_collect(collect, dag=is_dag)
         if cfg.executor in ("process", "remote"):
             if not (fused and self._fusable):
                 raise ValueError(f"executor={cfg.executor!r} ships compiled "

@@ -79,6 +79,26 @@ Thread vs process vs remote executor — decision matrix:
                       raising profile,      per-fault recovery    over TCP
                       keeps the rest        cost in FleetReport
                                             .recovery
+  dependency          no (edges would be    YES: bundles carry    YES: the same frontier
+  edges?              silently ignored —    ``parents``; the      across agents — a
+                      FleetConfig(dag=      stream's frontier     sink's parents may
+                      True, executor=       dispatches a bundle   have replayed on
+                      "thread") is          only after every      three different
+                      rejected loudly)      parent's result       hosts; skipped-
+                                            lands; a skipped      ancestor cascade
+                                            parent cascades       identical
+                                            (skipped_ancestor),
+                                            a killed one just
+                                            delays its children
+  critical path?      no (no per-node       YES: FleetReport.dag  YES: same accounting
+                      dispatch gating, so   carries critical_     (BundleTiming stamps
+                      there is no DAG run   path_s / makespan_s   are coordinator-
+                      to account)           / parallelism / per-  clock, transport-
+                                            node slack_s from     agnostic)
+                                            BundleTiming stamps;
+                                            Perfetto export draws
+                                            flow arrows along the
+                                            edges
   open-loop           no (batch replay      YES: StandingFleet    YES: the same serve
   arrivals?           only: dispatch is     (repro.service)       loop over a warm
                       driven by the         holds the pool warm   agent pool; arrivals
@@ -148,9 +168,10 @@ DeprecationWarning.  Migrating is mechanical::
     run_fleet(jobs, profiles=store.stream(tags), config=cfg)
 """
 from repro.fleet.bundle import (MeshSpec, ScheduleBundle,  # noqa: F401
-                                WorkerSpec, bundle_profile)
+                                WorkerSpec, bundle_parents, bundle_profile)
 from repro.fleet.chaos import ChaosPolicy, derive_seed  # noqa: F401
 from repro.fleet.config import (UNSET, FleetConfig)  # noqa: F401
+from repro.fleet.dag import critical_path, validate_parents  # noqa: F401
 from repro.fleet.executor import (BundleTiming,  # noqa: F401
                                   CrashLoopError,
                                   FleetBase, Peer, PeerGone,

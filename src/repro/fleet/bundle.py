@@ -77,6 +77,15 @@ class ScheduleBundle:
     amounts were already quantized into the tables with them applied —
     the barrier steps replayed per-sample on the worker need the same
     values.
+
+    ``parents`` is the bundle's dependency edges: the stream indices of
+    the bundles whose results must land before this one may dispatch
+    (``FleetBase.stream``'s frontier scheduler enforces it).  The field
+    is versioned the same way the v1/v2 detach payloads are: it defaults
+    to ``()``, and bundles pickled before it existed deserialize without
+    the attribute, so every consumer reads it through
+    ``bundle_parents()`` — old bundles rehydrate *edge-free* and replay
+    exactly as before.
     """
     command: str
     payload: Dict
@@ -87,9 +96,18 @@ class ScheduleBundle:
     n_profile_samples: int = 0
     planned: Optional[ResourceVector] = None
     tags: Dict[str, str] = field(default_factory=dict)
+    parents: Tuple[int, ...] = ()
 
     def rehydrate(self) -> CompiledSchedule:
         return rehydrate_schedule(self.payload)
+
+
+def bundle_parents(bundle) -> Tuple[int, ...]:
+    """A bundle's dependency edges, tolerant of pre-``parents`` pickles
+    (dataclass unpickling restores ``__dict__`` without calling
+    ``__init__``, so old bundles simply lack the attribute): missing or
+    empty means edge-free, exactly the pre-DAG behavior."""
+    return tuple(getattr(bundle, "parents", ()) or ())
 
 
 def bundle_profile(emulator: Emulator, profile: SynapseProfile, *,
@@ -97,7 +115,8 @@ def bundle_profile(emulator: Emulator, profile: SynapseProfile, *,
                    mesh_spec: Optional[MeshSpec] = None,
                    flops_scale: float = 1.0, storage_scale: float = 1.0,
                    mem_scale: float = 1.0,
-                   verify: bool = True) -> ScheduleBundle:
+                   verify: bool = True,
+                   parents: Tuple[int, ...] = ()) -> ScheduleBundle:
     """Compile one profile on ``emulator`` and detach it into a bundle.
 
     ``mesh_spec`` (the fleet's ``MeshSpec``) quantizes wire-byte runs into
@@ -125,4 +144,5 @@ def bundle_profile(emulator: Emulator, profile: SynapseProfile, *,
                           storage_scale=storage_scale, mem_scale=mem_scale,
                           verify=verify,
                           n_profile_samples=len(profile.samples),
-                          planned=profile.totals, tags=dict(profile.tags))
+                          planned=profile.totals, tags=dict(profile.tags),
+                          parents=tuple(parents))

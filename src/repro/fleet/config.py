@@ -74,6 +74,18 @@ class FleetConfig:
     injects a seeded, reproducible fault schedule (process/remote only);
     ``max_respawns`` caps worker respawns (process only).  Fault accounting
     lands in ``FleetReport.recovery``.
+
+    ``dag=True`` declares the run dependency-structured (bundles carry
+    ``parents`` edges, or the profile source is a ``WorkloadDag``) and
+    validates the combination up front: dependency edges need the
+    frontier scheduler in ``FleetBase.stream``, so the thread executor
+    is rejected at construction, and ``check_collect`` rejects
+    ``collect="totals"`` — totals mode drops the per-node timing that
+    critical-path accounting folds (and its index-order fold contract is
+    what makes DAG totals bit-identical to the linear stream's).
+    Passing a ``WorkloadDag`` to ``emulate_many`` applies the same
+    checks even with ``dag=False`` — the flag exists so a config built
+    far from the profile source still fails loudly at construction.
     """
 
     executor: str = "thread"
@@ -92,6 +104,7 @@ class FleetConfig:
     speculate: Optional[float] = None        # straggler re-dispatch factor
     chaos: Optional[ChaosPolicy] = None      # seeded fault injection
     max_respawns: Optional[int] = None       # process-pool respawn budget
+    dag: bool = False                        # dependency-structured run
 
     def __post_init__(self):
         if self.executor not in VALID_EXECUTORS:
@@ -171,6 +184,27 @@ class FleetConfig:
                                                      ChaosPolicy):
             raise TypeError(f"chaos must be a ChaosPolicy, got "
                             f"{type(self.chaos).__name__}")
+        if self.dag and self.executor == "thread":
+            raise ValueError(
+                "dag=True requires executor='process' or 'remote': "
+                "dependency edges are honored by the frontier scheduler "
+                "in FleetBase.stream — the in-process thread pool has no "
+                "dispatch gating, so edges would be silently ignored")
+
+    def check_collect(self, collect: str, *, dag: Optional[bool] = None
+                      ) -> None:
+        """Validate a ``collect`` mode against this config (and, when the
+        caller knows it, whether the profile source is actually a DAG).
+        ``collect="totals"`` on a dependency-structured run is rejected:
+        totals mode drops the per-node ``BundleTiming`` stamps that
+        critical-path accounting needs."""
+        effective = self.dag if dag is None else (dag or self.dag)
+        if effective and collect == "totals":
+            raise ValueError(
+                "collect='totals' is incompatible with a "
+                "dependency-structured run: totals mode drops the "
+                "per-node BundleTiming stamps critical-path accounting "
+                "needs — use collect='reports'")
 
     @property
     def scale_min(self) -> int:
@@ -237,6 +271,7 @@ class FleetConfig:
                 speculate: Optional[float] = None,
                 chaos: Optional[ChaosPolicy] = None,
                 max_respawns: Optional[int] = None,
+                dag: bool = False,
                 timeout: float = 600.0) -> "FleetConfig":
         """Spawn-based local worker pool (``repro.fleet.ProcessFleet``)."""
         return cls(executor="process", max_workers=max_workers,
@@ -245,7 +280,7 @@ class FleetConfig:
                    max_attempts=max_attempts,
                    liveness_timeout=liveness_timeout, on_failure=on_failure,
                    speculate=speculate, chaos=chaos,
-                   max_respawns=max_respawns, timeout=timeout)
+                   max_respawns=max_respawns, dag=dag, timeout=timeout)
 
     @classmethod
     def remote(cls, hosts: Optional[Sequence[str]] = None, *,
@@ -258,6 +293,7 @@ class FleetConfig:
                on_failure: str = "raise",
                speculate: Optional[float] = None,
                chaos: Optional[ChaosPolicy] = None,
+               dag: bool = False,
                timeout: float = 600.0) -> "FleetConfig":
         """TCP host agents (``repro.fleet.RemoteFleet``): dial ``hosts``
         and/or ``listen`` for dial-in agents.  With ``autoscale`` the open
@@ -269,7 +305,8 @@ class FleetConfig:
                    min_workers=min_workers, window=window,
                    max_attempts=max_attempts,
                    liveness_timeout=liveness_timeout, on_failure=on_failure,
-                   speculate=speculate, chaos=chaos, timeout=timeout)
+                   speculate=speculate, chaos=chaos, dag=dag,
+                   timeout=timeout)
 
     # -- legacy folding ------------------------------------------------------
 

@@ -59,6 +59,19 @@ exhausted attempt budgets into *skipped indices* rather than a raised
 stream; either way ``last_recovery`` records what every fault cost
 (requeue latency, lost replay work, MTTR, skips, speculation, heartbeat
 volume) and surfaces as ``FleetReport.recovery``.
+
+Bundles may carry dependency edges (``ScheduleBundle.parents``: stream
+indices of earlier bundles).  ``stream`` then becomes a *frontier*
+scheduler: an edged bundle is admitted into the window but enters the
+pending queue only when every parent's result has landed, so a
+fork-join sink can never race its branches no matter how many slots are
+free.  Edges compose with the whole hardening stack — a killed parent
+requeues and its children simply stay blocked until the retry lands,
+and under ``on_failure="skip"`` a skipped parent *cascades*: every
+transitively-blocked descendant is skipped too (reason ``"ancestor"``,
+tallied separately in ``last_recovery["skipped_ancestor"]``) instead of
+deadlocking the stream.  Edge-free bundles take the exact pre-DAG code
+path, so linear streams replay bit-identically.
 """
 from __future__ import annotations
 
@@ -75,8 +88,10 @@ from typing import (Callable, Deque, Dict, Iterable, Iterator, List,
 
 from repro.core.emulator import (EmulationReport, Emulator, FleetReport,
                                  ReportFold)
-from repro.fleet.bundle import ScheduleBundle, WorkerSpec, bundle_profile
+from repro.fleet.bundle import (ScheduleBundle, WorkerSpec, bundle_parents,
+                                bundle_profile)
 from repro.fleet.chaos import ChaosPolicy
+from repro.fleet.dag import critical_path, validate_parents
 from repro.fleet.worker import worker_loop
 from repro.obs import clock as obs_clock
 from repro.obs.clock import ClockSync
@@ -228,6 +243,11 @@ class FleetBase:
         self.last_scaling: Dict[str, int] = {}
         #: fault-recovery accounting of the most recent stream
         self.last_recovery: Dict = {}
+        #: indices skipped because an *ancestor* was skipped (cascade
+        #: holes, not direct poison) — updated live during the stream so
+        #: a consumer folding ``(idx, None)`` announcements can classify
+        #: each hole the moment it is yielded
+        self.last_ancestor_skips: Set[int] = set()
         #: MTTR bookkeeping: death times of faults a refill will repair,
         #: popped when the replacement reports ready (approximate when a
         #: scale-up races an outstanding respawn, exact otherwise)
@@ -443,6 +463,23 @@ class FleetBase:
         (``repro.service.standing``) yields ``None`` while the queue is
         empty and raises ``StopIteration`` only on drain/close.
 
+        *Dependency edges*: a bundle whose ``parents`` tuple is
+        non-empty is admitted (it occupies a window slot) but joins the
+        pending queue only once every parent's result has been yielded —
+        the dispatchable *frontier*.  Parents must reference earlier
+        stream indices; forward/self references (the only way to express
+        a cycle, since indices are assigned in arrival order) raise
+        ``ValueError`` at admission instead of deadlocking.  Queue time
+        starts at *release*, not admission, so ``BundleTiming.queue_s``
+        never charges a child for its parents' replay.  A requeued
+        (killed/hung) parent keeps its children blocked until the retry
+        lands; a *skipped* parent (``on_failure="skip"``) cascades — all
+        transitively-blocked descendants are skipped as ``(idx, None)``
+        with reason ``"ancestor"`` and counted in
+        ``last_recovery["skipped_ancestor"]`` (and live in
+        ``last_ancestor_skips``), distinct from direct poison.
+        Edge-free bundles take the identical pre-DAG path bit for bit.
+
         Hardening knobs:
 
         * ``max_attempts`` — per-bundle dispatch budget before the bundle
@@ -532,6 +569,13 @@ class FleetBase:
         q_wait: Dict[int, float] = {}        # idx -> accumulated queue time
         done_times: List[float] = []         # dispatch->ok latencies
         skipped: List[int] = []
+        # -- dependency frontier (bundles with parents edges) ----------------
+        blocked: Dict[int, Set[int]] = {}    # idx -> unmet parent idxs
+        dependants: Dict[int, List[int]] = {}  # parent -> blocked children
+        completed: Set[int] = set()          # idxs whose result was yielded
+        skipped_set: Set[int] = set()        # fast ancestor-doom lookup
+        anc_skipped: List[int] = []          # cascade holes, not poison
+        self.last_ancestor_skips = set()
         requeued = 0
         requeue_wait = 0.0
         requeue_waits = 0
@@ -559,11 +603,21 @@ class FleetBase:
                     q_since[i] = now        # back in the queue: the clock
                     # charges queue time again, never replay time
 
-        def skip(idx: int) -> None:
+        def skip(idx: int, ancestor: Optional[int] = None) -> None:
             now = obs_clock.now()
             skipped.append(idx)
+            skipped_set.add(idx)
             self._m_skip.inc()
-            self.recorder.record("skip", idx=idx)
+            if ancestor is None:
+                self.recorder.record("skip", idx=idx)
+            else:
+                # a cascade hole: this bundle never failed — a bundle it
+                # (transitively) depends on did
+                anc_skipped.append(idx)
+                self.last_ancestor_skips.add(idx)
+                self.recorder.record("skip", idx=idx, reason="ancestor",
+                                     parent=ancestor)
+            blocked.pop(idx, None)
             held.pop(idx, None)
             att = attempts.pop(idx, None)
             t = disp_at.pop(idx, None)
@@ -579,6 +633,23 @@ class FleetBase:
                 record_timing(idx, BundleTiming(
                     enqueued=enq, dispatched=t, done=now, queue_s=qw,
                     replay_s=0.0, attempts=att or 0, ok=False))
+
+        def doomed(idx: int) -> List[int]:
+            """Descendants transitively blocked on a just-skipped ``idx``
+            — they can never dispatch, so the caller skips them too.  A
+            multi-parent child reached through a second doomed parent is
+            guarded by the ``blocked`` membership test (it was already
+            unblocked-by-doom the first time)."""
+            out: List[int] = []
+            frontier = [idx]
+            while frontier:
+                p = frontier.pop(0)
+                for c in sorted(dependants.pop(p, ())):
+                    if c in blocked:
+                        del blocked[c]
+                        out.append(c)
+                        frontier.append(c)
+            return sorted(out)
 
         try:
             while True:
@@ -597,13 +668,48 @@ class FleetBase:
                         # admitting this pass, keep the scheduler turning
                         saw_none = True
                         break
-                    now = obs_clock.now()
-                    held[next_idx] = b
-                    pending.append(next_idx)
-                    attempts[next_idx] = 0
-                    enq_at[next_idx] = q_since[next_idx] = now
-                    self.recorder.record("enqueue", idx=next_idx)
+                    idx = next_idx
                     next_idx += 1
+                    parents = bundle_parents(b)
+                    if parents:
+                        parents = validate_parents(
+                            idx, parents, getattr(b, "command", ""))
+                    now = obs_clock.now()
+                    if any(p in skipped_set for p in parents):
+                        # doomed on arrival: an ancestor is already a
+                        # hole — announce this one immediately
+                        anc = next(p for p in sorted(parents)
+                                   if p in skipped_set)
+                        enq_at[idx] = now
+                        self.recorder.record("enqueue", idx=idx,
+                                             parents=list(parents))
+                        skip(idx, ancestor=anc)
+                        yield idx, None
+                        continue
+                    held[idx] = b
+                    attempts[idx] = 0
+                    enq_at[idx] = now
+                    unmet = {p for p in parents if p not in completed}
+                    if unmet:
+                        # admitted but not dispatchable: enters pending
+                        # only when the last parent's result lands —
+                        # q_since stamps at *release*, so queue_s never
+                        # charges a child for its parents' replay
+                        blocked[idx] = unmet
+                        for p in unmet:
+                            dependants.setdefault(p, []).append(idx)
+                        self.recorder.record("enqueue", idx=idx,
+                                             parents=list(parents))
+                        self.recorder.record("dep_wait", idx=idx,
+                                             unmet=sorted(unmet))
+                        continue
+                    pending.append(idx)
+                    q_since[idx] = now
+                    if parents:
+                        self.recorder.record("enqueue", idx=idx,
+                                             parents=list(parents))
+                    else:
+                        self.recorder.record("enqueue", idx=idx)
                 if exhausted and not held:
                     break
                 peak_window = max(peak_window, len(held))
@@ -630,6 +736,9 @@ class FleetBase:
                             if on_failure == "skip":
                                 skip(idx)
                                 yield idx, None
+                                for c in doomed(idx):
+                                    skip(c, ancestor=idx)
+                                    yield c, None
                                 continue
                             raise RuntimeError(
                                 f"bundle {idx} ({held[idx].command!r}) "
@@ -805,6 +914,20 @@ class FleetBase:
                             self._m_done.inc()
                             self.recorder.record("done", idx=idx,
                                                  peer=peer.scope)
+                            # frontier release: children whose last
+                            # unmet parent this was become dispatchable
+                            completed.add(idx)
+                            for c in sorted(dependants.pop(idx, ())):
+                                un = blocked.get(c)
+                                if un is None:
+                                    continue
+                                un.discard(idx)
+                                if not un:
+                                    del blocked[c]
+                                    q_since[c] = now
+                                    pending.append(c)
+                                    self.recorder.record("dep_release",
+                                                         idx=c, parent=idx)
                             enq = enq_at.pop(idx, now)
                             if record_timing is not None:
                                 record_timing(idx, BundleTiming(
@@ -843,6 +966,9 @@ class FleetBase:
                             if on_failure == "skip":
                                 skip(idx)
                                 yield idx, None
+                                for c in doomed(idx):
+                                    skip(c, ancestor=idx)
+                                    yield c, None
                                 continue
                             raise RuntimeError(
                                 f"fleet worker ({peer.describe()}) failed "
@@ -872,6 +998,7 @@ class FleetBase:
                 "lost_replay_s": lost_replay,
                 "mttr_s": (sum(mttr) / len(mttr)) if mttr else None,
                 "skipped": sorted(skipped),
+                "skipped_ancestor": sorted(anc_skipped),
                 "speculative_dispatches": spec_dispatches,
                 "speculative_wins": spec_wins,
                 "heartbeats": pings,
@@ -1261,10 +1388,37 @@ def run_process_fleet(emulator: Emulator, profiles, *, max_workers: int = 4,
     the stream raises — the partial ``FleetReport`` rides on the raised
     exception as ``.fleet_report`` so failure paths keep their recovery
     accounting.
+
+    ``profiles`` may also be a ``WorkloadDag`` (anything with a
+    ``parents_map``): each node compiles into a bundle carrying its
+    dependency edges, ``stream``'s frontier gates dispatch on them, the
+    fold distinguishes cascade holes from direct poison, and the
+    returned report's ``dag`` dict carries critical-path accounting
+    (``critical_path_s``, ``makespan_s``, per-node ``slack_s``) built
+    from the per-bundle timing stamps.  ``collect="totals"`` is rejected
+    for dags — it drops exactly the per-node timing the critical path
+    needs.
     """
+    is_dag = hasattr(profiles, "parents_map")
+    if is_dag and collect == "totals":
+        raise ValueError(
+            "collect='totals' is incompatible with a WorkloadDag: totals "
+            "mode drops the per-node BundleTiming stamps critical-path "
+            "accounting needs — use collect='reports'")
     n_samples = {"n": 0}                 # true profile samples compiled
 
     def _bundles():
+        if is_dag:
+            for node in profiles.nodes:
+                b = bundle_profile(emulator, node.profile,
+                                   mesh_spec=mesh_spec,
+                                   flops_scale=flops_scale,
+                                   storage_scale=storage_scale,
+                                   mem_scale=mem_scale, verify=verify,
+                                   parents=node.parents)
+                n_samples["n"] += b.n_profile_samples
+                yield b
+            return
         for p in profiles:
             b = bundle_profile(emulator, p, mesh_spec=mesh_spec,
                                flops_scale=flops_scale,
@@ -1289,6 +1443,7 @@ def run_process_fleet(emulator: Emulator, profiles, *, max_workers: int = 4,
                              max_respawns=max_respawns)
     t0 = time.perf_counter()
     fold = ReportFold(keep_reports=collect != "totals")
+    timings: Dict[int, BundleTiming] = {}
 
     def _snapshot():
         return ({"workers": fleet.n_workers,
@@ -1304,16 +1459,23 @@ def run_process_fleet(emulator: Emulator, profiles, *, max_workers: int = 4,
             cache_stats=stats, totals=fold.totals,
             n_samples=n_samples["n"], n_replayed=fold.n_done,
             scaling=scaling, recovery=recovery,
-            obs=fleet.obs_snapshot(last_n))
+            obs=fleet.obs_snapshot(last_n),
+            dag=(critical_path(profiles.parents_map, timings)
+                 if is_dag else {}))
 
     gen = fleet.stream(_bundles(), timeout=timeout, window=window,
                        max_attempts=max_attempts,
                        liveness_timeout=liveness_timeout,
-                       speculate=speculate, on_failure=on_failure)
+                       speculate=speculate, on_failure=on_failure,
+                       record_timing=(timings.__setitem__
+                                      if is_dag else None))
     try:
         for idx, rep in gen:
             if rep is None:
-                fold.skip(idx)     # degraded-mode hole: fold past it
+                # degraded-mode hole: fold past it, classifying cascade
+                # holes (ancestor skipped) apart from direct poison
+                fold.skip(idx,
+                          ancestor=idx in fleet.last_ancestor_skips)
             else:
                 fold.add(idx, rep)
         snap = _snapshot()

@@ -53,6 +53,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.emulator import Emulator, FleetReport, ReportFold
 from repro.fleet.bundle import WorkerSpec, bundle_profile
+from repro.fleet.dag import critical_path
 from repro.fleet.executor import FleetBase, Peer, PeerGone
 from repro.fleet.transport import framing
 from repro.obs import clock as obs_clock
@@ -333,7 +334,19 @@ def run_remote_fleet(emulator: Emulator, profiles, *,
     process fleet given the same policy.  Stats/scaling/recovery are
     snapshotted even when the stream raises — the partial ``FleetReport``
     rides on the exception as ``.fleet_report``.
+
+    ``profiles`` may also be a ``WorkloadDag`` (anything with a
+    ``parents_map``): node bundles ship their dependency edges, the
+    scheduler's frontier gates dispatch on them across agents, and the
+    report's ``dag`` dict carries critical-path accounting — same
+    contract as ``run_process_fleet``, ``collect="totals"`` rejected.
     """
+    is_dag = hasattr(profiles, "parents_map")
+    if is_dag and collect == "totals":
+        raise ValueError(
+            "collect='totals' is incompatible with a WorkloadDag: totals "
+            "mode drops the per-node BundleTiming stamps critical-path "
+            "accounting needs — use collect='reports'")
     own = fleet is None
     if own:
         # assemble (and config-validate / dial) BEFORE compiling: a bad
@@ -351,7 +364,20 @@ def run_remote_fleet(emulator: Emulator, profiles, *,
     fold = ReportFold(keep_reports=collect != "totals")
     n_samples = {"n": 0}                 # true profile samples compiled
 
+    timings: Dict[int, "BundleTiming"] = {}
+
     def _bundles():
+        if is_dag:
+            for node in profiles.nodes:
+                b = bundle_profile(emulator, node.profile,
+                                   mesh_spec=mesh_spec,
+                                   flops_scale=flops_scale,
+                                   storage_scale=storage_scale,
+                                   mem_scale=mem_scale, verify=verify,
+                                   parents=node.parents)
+                n_samples["n"] += b.n_profile_samples
+                yield b
+            return
         for p in profiles:
             b = bundle_profile(emulator, p, mesh_spec=mesh_spec,
                                flops_scale=flops_scale,
@@ -372,16 +398,22 @@ def run_remote_fleet(emulator: Emulator, profiles, *,
             serial_s=fold.serial_s, max_workers=workers, cache_stats=stats,
             totals=fold.totals, n_samples=n_samples["n"],
             n_replayed=fold.n_done, scaling=scaling, recovery=recovery,
-            obs=fleet.obs_snapshot(last_n))
+            obs=fleet.obs_snapshot(last_n),
+            dag=(critical_path(profiles.parents_map, timings)
+                 if is_dag else {}))
 
     gen = fleet.stream(_bundles(), timeout=timeout, window=window,
                        max_attempts=max_attempts,
                        liveness_timeout=liveness_timeout,
-                       speculate=speculate, on_failure=on_failure)
+                       speculate=speculate, on_failure=on_failure,
+                       record_timing=(timings.__setitem__
+                                      if is_dag else None))
     try:
         for idx, rep in gen:
             if rep is None:
-                fold.skip(idx)     # degraded-mode hole: fold past it
+                # degraded-mode hole: cascade holes classified apart
+                fold.skip(idx,
+                          ancestor=idx in fleet.last_ancestor_skips)
             else:
                 fold.add(idx, rep)
         snap = _snapshot()

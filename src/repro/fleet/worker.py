@@ -196,9 +196,19 @@ def worker_loop(conn, spec, scope: str = "worker:0") -> None:
                             n_dispatches=rep.n_dispatches,
                             mode=rep.mode, n_samples=rep.n_samples)
             if rep.n_collective_dispatches:
-                recorder.record("collective_leg", idx=idx,
-                                n=rep.n_collective_dispatches,
-                                ici_bytes=rep.emulated_ici_bytes)
+                # a "collective_group" tag names the logical collective
+                # this bundle's legs belong to — the trace exporter links
+                # same-group legs across workers with flow arrows
+                group = bundle.tags.get("collective_group")
+                if group is not None:
+                    recorder.record("collective_leg", idx=idx,
+                                    n=rep.n_collective_dispatches,
+                                    ici_bytes=rep.emulated_ici_bytes,
+                                    group=group)
+                else:
+                    recorder.record("collective_leg", idx=idx,
+                                    n=rep.n_collective_dispatches,
+                                    ici_bytes=rep.emulated_ici_bytes)
             try:
                 send(("ok", idx, rep, recorder.drain()))
             except (BrokenPipeError, OSError):

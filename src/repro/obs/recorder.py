@@ -43,6 +43,12 @@ KINDS = (
     "requeue",          # coordinator: bundle returned for another attempt
     "done",             # coordinator: bundle's report folded
     "skip",             # coordinator: poison budget spent, hole folded
+                        #   (reason="ancestor": cascade hole — a bundle
+                        #   this one depends on was skipped, not itself)
+    "dep_wait",         # coordinator: bundle admitted but blocked on
+                        #   unmet dependency edges (frontier)
+    "dep_release",      # coordinator: last unmet parent landed — the
+                        #   bundle entered the dispatchable frontier
     "heartbeat",        # any: liveness pulse observed (excluded from seq)
     "scale_up",         # coordinator: pool grew
     "scale_down",       # coordinator: pool shrank (drain or midstream)

@@ -14,6 +14,13 @@ timestamps.  The mapping here:
   its rescue worker);
 * instant events (``"ph": "i"``) for faults, scales, skips, crash
   loops;
+* flow arrows (``"ph": "s"``/``"f"`` pairs) along dependency edges —
+  from a parent bundle's ``done`` on its serving worker's track to the
+  child's first subsequent ``dispatch`` on *its* worker's track, so a
+  DAG run's fork-join structure is visible as arrows crossing worker
+  tracks in Perfetto — and between the legs of one collective
+  (``collective_leg`` events sharing a ``group``) across workers, the
+  same mechanism linking the spans of a single logical collective;
 * counter tracks (``"ph": "C"``) for SLO windows (p50/p99/p999 ms)
   when the caller passes the ``SLOEngine`` report.
 
@@ -39,6 +46,7 @@ _INSTANT_KINDS = {
     "fault_opened": "fault", "fault_repaired": "fault",
     "speculate": "sched", "crash_loop": "fault",
     "heartbeat": "liveness",
+    "dep_wait": "dag", "dep_release": "dag",
 }
 
 
@@ -105,6 +113,70 @@ def to_chrome_trace(events: Sequence[Event],
                     "args": {"idx": idx, "outcome": e.kind,
                              "attempt": open_disp.get("attempt", 1)}})
                 open_disp = None
+    # -- dependency flow arrows ---------------------------------------
+    # one s/f pair per edge: start at the parent's done (on the track
+    # that served it), finish at the child's first dispatch at-or-after
+    # it (on the child's serving track) — Perfetto draws the arrow
+    # between the two replay spans, making the DAG visible across
+    # worker tracks.  bp="e" binds the finish to its enclosing slice.
+    flow_id = 0
+    done_ev: Dict[int, Event] = {}
+    parents_of: Dict[int, Sequence[int]] = {}
+    for e in events:
+        idx = e.get("idx")
+        if idx is None:
+            continue
+        if e.kind == "done" and idx not in done_ev:
+            done_ev[idx] = e
+        elif e.kind == "enqueue" and e.get("parents") and \
+                idx not in parents_of:
+            parents_of[idx] = e.get("parents")
+    for idx in sorted(parents_of):
+        for p in parents_of[idx]:
+            dn = done_ev.get(p)
+            if dn is None:
+                continue        # parent skipped/unfinished: no arrow
+            disp = next((e for e in by_idx.get(idx, ())
+                         if e.kind == "dispatch" and e.t >= dn.t),
+                        next((e for e in by_idx.get(idx, ())
+                              if e.kind == "dispatch"), None))
+            if disp is None:
+                continue
+            flow_id += 1
+            out.append({
+                "name": "dep", "cat": "dag", "ph": "s", "id": flow_id,
+                "pid": _PID, "tid": tid(str(dn.get("peer", dn.scope))),
+                "ts": _us(dn.t, t0), "args": {"parent": p, "child": idx}})
+            out.append({
+                "name": "dep", "cat": "dag", "ph": "f", "bp": "e",
+                "id": flow_id, "pid": _PID,
+                "tid": tid(str(disp.get("peer", disp.scope))),
+                "ts": _us(max(disp.t, dn.t), t0),
+                "args": {"parent": p, "child": idx}})
+    # -- collective span links ----------------------------------------
+    # legs of one logical collective share a ``group`` tag; chain them
+    # in time order with the same flow mechanism so the legs a single
+    # collective lands on different workers read as one linked operation
+    groups: Dict[str, List[Event]] = {}
+    for e in events:
+        if e.kind == "collective_leg" and e.get("group") is not None:
+            groups.setdefault(str(e.get("group")), []).append(e)
+    for g in sorted(groups):
+        legs = sorted(groups[g], key=lambda e: (e.t, e.scope, e.ordinal))
+        if len(legs) < 2 or len({e.scope for e in legs}) < 2:
+            continue            # one worker's legs already share a track
+        for a, b in zip(legs, legs[1:]):
+            flow_id += 1
+            out.append({
+                "name": "collective_link", "cat": "collective",
+                "ph": "s", "id": flow_id, "pid": _PID,
+                "tid": tid(a.scope), "ts": _us(a.t, t0),
+                "args": {"group": g}})
+            out.append({
+                "name": "collective_link", "cat": "collective",
+                "ph": "f", "bp": "e", "id": flow_id, "pid": _PID,
+                "tid": tid(b.scope), "ts": _us(max(b.t, a.t), t0),
+                "args": {"group": g}})
     # -- worker-side spans and instants -------------------------------
     for e in events:
         if e.kind == "segment_replay":
@@ -163,7 +235,10 @@ def slo_windows_ms(slo_report: dict) -> List[dict]:
 _REQUIRED = {"X": ("name", "ph", "pid", "tid", "ts", "dur"),
              "i": ("name", "ph", "pid", "tid", "ts"),
              "C": ("name", "ph", "pid", "ts", "args"),
-             "M": ("name", "ph", "pid", "args")}
+             "M": ("name", "ph", "pid", "args"),
+             # flow arrows: start / finish (finish also carries bp="e")
+             "s": ("name", "cat", "id", "pid", "tid", "ts"),
+             "f": ("name", "cat", "id", "pid", "tid", "ts")}
 
 
 def validate_trace(trace: dict) -> None:

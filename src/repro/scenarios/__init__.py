@@ -8,6 +8,14 @@ package registers them all:
   * ``fanout_straggler``  — N parallel workers, one tail-latency outlier
   * ``retry_storm``       — flaky work re-consumed under exponential backoff
   * ``mixed_fleet``       — weighted blend of the families above
+  * ``dag_diamond``       — fork-join diamond, one seeded straggler branch
+  * ``deep_chain``        — deep sequential chain, all critical path
+
+``algebra`` composes profiles (``concat``/``overlay``/``scale``) and
+structures them as dependency DAGs (``WorkloadDag`` via ``chain``/
+``fork_join``) — feed a ``WorkloadDag`` to ``Emulator.emulate_many``
+(process/remote) for frontier-scheduled replay with critical-path
+metrics in ``FleetReport.dag``.
 
 ``driver.run_scenario`` wires a scenario end-to-end
 (generate -> predict -> emulate -> store); ``driver.run_fleet`` replays many
@@ -16,7 +24,10 @@ the process-level fleet executor (``repro.fleet``) via
 ``executor="process"``.  ``python -m repro.scenarios list|run|fleet`` is
 the command-line front door (see ``__main__``).
 """
-from repro.scenarios import fanout, mixed, retry, serving, training  # noqa
+from repro.scenarios import dag, fanout, mixed, retry, serving, training  # noqa
+from repro.scenarios.algebra import (DagNode, WorkloadDag,  # noqa
+                                     chain, concat, fork_join, overlay,
+                                     scale)
 from repro.scenarios.base import (ScenarioSpec, generate,  # noqa
                                   get_scenario, list_scenarios, register,
                                   validate)

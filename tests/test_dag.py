@@ -1,0 +1,580 @@
+"""DAG scenario algebra end-to-end (ISSUE 10 contracts).
+
+Fast tests pin the algebra laws (concat associativity, overlay
+commutativity, scale), the ``WorkloadDag`` construction contract
+(topological by construction, forward/self parents rejected), the
+bundle-layer edge versioning, and — on the in-process loopback fleet —
+the frontier scheduler itself: an edge-free DAG folds to totals
+bit-identical to the linear stream, children never dispatch before
+their parents' results land, a requeued parent keeps its children
+blocked, and a skipped parent cascades typed ``skipped_ancestor`` holes
+through its descendants instead of deadlocking.  Critical-path math is
+pinned against analytic fixtures, and the trace exporter's flow arrows
+(dependency edges, collective span links) are checked structurally.
+
+Process tests (marked ``slow`` + ``subproc``) run a real diamond on a
+spawned worker pool — exact totals, critical-path sanity — and the
+chaos contract: a seeded kill of the fork parent reproduces the same
+``(scope, kind, ordinal)`` event sequence run to run while the
+branches still only dispatch after the parent's (recovered) result.
+"""
+import pickle
+
+import pytest
+
+from repro.core import Emulator, ResourceVector, Sample, SynapseProfile
+from repro.core.emulator import EmulationReport, FleetReport, ReportFold
+from repro.fleet import (ChaosPolicy, FleetBase, FleetConfig, Peer,
+                        ScheduleBundle, bundle_parents, bundle_profile,
+                        critical_path, validate_parents)
+from repro.fleet.executor import BundleTiming
+from repro.obs.recorder import Event, FlightRecorder, event_sequence
+from repro.obs.trace import to_chrome_trace, validate_trace
+from repro.scenarios import (WorkloadDag, chain, concat, fork_join,
+                             generate, overlay, scale, validate)
+from repro.scenarios.dag import dag_diamond_workload, deep_chain_workload
+
+TILE = 64                  # 1 compute iter = 2*64^3  = 524288 flops
+BLOCK = 1 << 18            # 1 memory  iter = 2*2^18  = 524288 bytes
+FPI = 2.0 * TILE ** 3
+BPI = 2.0 * BLOCK
+
+
+def _em(**kw):
+    return Emulator(compute_tile=TILE, mem_block=BLOCK, **kw)
+
+
+def _rv(flops=0.0, hbm=0.0):
+    return ResourceVector(flops=flops, hbm_bytes=hbm)
+
+
+def _profile(rvs, command="dag-test"):
+    return SynapseProfile(command=command,
+                          samples=[Sample(index=i, resources=r)
+                                   for i, r in enumerate(rvs)])
+
+
+# ---------------------------------------------------------------------------
+# algebra laws
+# ---------------------------------------------------------------------------
+
+def test_concat_is_associative_samplewise():
+    # awkward floats: bit-identity only holds if the sample list really
+    # is order-identical under any parenthesization
+    a = _profile([_rv(flops=0.1), _rv(hbm=0.7)], "a")
+    b = _profile([_rv(flops=0.3)], "b")
+    c = _profile([_rv(hbm=1.9), _rv(flops=2.3)], "c")
+    left = concat(concat(a, b), c)
+    right = concat(a, concat(b, c))
+    assert len(left.samples) == 5
+    assert [s.index for s in left.samples] == list(range(5))
+    for ls, rs in zip(left.samples, right.samples):
+        assert ls.resources == rs.resources and ls.index == rs.index
+    assert left.totals == right.totals
+    validate(left)
+
+
+def test_overlay_commutes_and_zero_pads():
+    a = _profile([_rv(flops=0.1), _rv(flops=0.2), _rv(flops=0.4)], "a")
+    b = _profile([_rv(hbm=0.7)], "b")
+    ab, ba = overlay(a, b), overlay(b, a)
+    assert len(ab.samples) == 3                  # padded to the longer
+    for x, y in zip(ab.samples, ba.samples):
+        assert x.resources == y.resources        # bitwise: add commutes
+    # disjoint resource types compose without interacting
+    assert ab.samples[0].resources.flops == 0.1
+    assert ab.samples[0].resources.hbm_bytes == 0.7
+    assert ab.samples[2].resources.hbm_bytes == 0.0
+
+
+def test_scale_scales_and_validates():
+    p = _profile([_rv(flops=2.0, hbm=4.0)], "p")
+    assert scale(p, 2.5).samples[0].resources.flops == 5.0
+    assert scale(p, 0.0).samples[0].resources.flops == 0.0
+    with pytest.raises(ValueError, match="factor"):
+        scale(p, -1.0)
+    with pytest.raises(ValueError):
+        concat()
+    with pytest.raises(ValueError):
+        overlay()
+
+
+# ---------------------------------------------------------------------------
+# WorkloadDag model
+# ---------------------------------------------------------------------------
+
+def test_workload_dag_topological_by_construction():
+    p = _profile([_rv(flops=1.0)])
+    dag = WorkloadDag()
+    root = dag.add(p)
+    mid = dag.add(p, (root,))
+    assert (root, mid) == (0, 1)
+    with pytest.raises(ValueError, match="forward or self"):
+        dag.add(p, (5,))                         # forward ref
+    with pytest.raises(ValueError, match="forward or self"):
+        dag.add(p, (2,))                         # self ref
+    with pytest.raises(ValueError, match="repeats"):
+        dag.add(p, (0, 0))
+    sink = dag.add(p, (0, 1))
+    assert dag.parents_map == {0: (), 1: (0,), 2: (0, 1)}
+    assert dag.n_edges == 3 and len(dag) == 3 and sink == 2
+
+
+def test_dag_shapes_and_linearize():
+    d = dag_diamond_workload(fanout=3, work_flops=FPI, work_hbm=BPI,
+                             straggler_index=1, straggler_factor=2.0)
+    assert d.parents_map == {0: (), 1: (0,), 2: (0,), 3: (0,),
+                             4: (1, 2, 3)}
+    # straggler branch does exactly straggler_factor x the work
+    assert d.nodes[2].profile.totals.flops == \
+        2.0 * d.nodes[1].profile.totals.flops
+    c = deep_chain_workload(depth=4, work_flops=FPI, work_hbm=BPI)
+    assert c.parents_map == {0: (), 1: (0,), 2: (1,), 3: (2,)}
+    lin = d.linearize()
+    validate(lin)
+    assert lin.totals == d.totals                # index-order fold agrees
+    assert lin.meta["dag"]["parents"] == [[], [0], [0], [0], [1, 2, 3]]
+
+
+def test_dag_scenarios_registered():
+    p = generate("dag_diamond", fanout=3, work_flops=FPI, work_hbm=BPI)
+    assert p.meta["dag"]["parents"][-1] == [1, 2, 3]
+    assert p.tags["scenario"] == "dag_diamond"
+    q = generate("deep_chain", depth=3, work_flops=FPI, work_hbm=BPI)
+    assert q.meta["dag"]["parents"] == [[], [0], [1]]
+    # linearized totals equal the workload's node-index-order fold
+    d = dag_diamond_workload(fanout=3, work_flops=FPI, work_hbm=BPI)
+    assert generate("dag_diamond", fanout=3, work_flops=FPI,
+                    work_hbm=BPI).totals == d.totals
+
+
+# ---------------------------------------------------------------------------
+# bundle layer: versioned edges
+# ---------------------------------------------------------------------------
+
+def test_bundle_parents_versioning(tmp_path):
+    b = ScheduleBundle(command="x", payload={}, parents=(0, 2))
+    assert bundle_parents(pickle.loads(pickle.dumps(b))) == (0, 2)
+    # a bundle pickled before the field existed deserializes without the
+    # attribute (dataclass unpickling restores __dict__, no __init__):
+    # consumers must read it as edge-free
+    old = ScheduleBundle(command="x", payload={})
+    del old.__dict__["parents"]
+    assert bundle_parents(pickle.loads(pickle.dumps(old))) == ()
+    em = _em()
+    try:
+        bun = bundle_profile(em, _profile([_rv(flops=FPI)]), parents=(1,))
+    finally:
+        em.storage.cleanup()
+    assert bun.parents == (1,)
+
+
+def test_validate_parents_contract():
+    assert validate_parents(3, (0, 2)) == (0, 2)
+    with pytest.raises(ValueError, match="unsatisfiable"):
+        validate_parents(0, (0,))
+    with pytest.raises(ValueError, match="unsatisfiable"):
+        validate_parents(2, (3,))
+    with pytest.raises(ValueError, match="repeats"):
+        validate_parents(3, (1, 1))
+
+
+# ---------------------------------------------------------------------------
+# frontier scheduling on the in-process loopback fleet
+# ---------------------------------------------------------------------------
+
+class _EchoPeer(Peer):
+    """Loopback peer: ``dispatch`` writes the reply into its own pipe.
+    ``fail`` commands reply ("err", ...); ``retry_once`` commands reply
+    ("retry", ...) on their first dispatch and ok after."""
+
+    def __init__(self, fail=(), retry_once=()):
+        import multiprocessing as mp
+        super().__init__()
+        self._r, self._w = mp.Pipe(duplex=False)
+        self.ready = True
+        self._fail = set(fail)
+        self._retry = set(retry_once)
+
+    @property
+    def waitable(self):
+        return self._r
+
+    def dispatch(self, epoch, idx, bundle):
+        self.tasks.add((epoch, idx))
+        if bundle.command in self._fail:
+            self._w.send(("err", epoch, idx, "boom"))
+            return
+        if bundle.command in self._retry:
+            self._retry.discard(bundle.command)
+            self._w.send(("retry", epoch, idx, "worker-died"))
+            return
+        rep = EmulationReport(command=bundle.command, ttc_s=1e-3,
+                              n_samples=bundle.n_profile_samples,
+                              consumed=bundle.planned, mode="fused")
+        self._w.send(("ok", epoch, idx, rep))
+
+    def recv(self):
+        return self._r.recv()
+
+    def close(self):
+        self._r.close()
+        self._w.close()
+
+
+class _EchoFleet(FleetBase):
+    def __init__(self, n, **peer_kw):
+        super().__init__()
+        for _ in range(n):
+            self._peers.append(_EchoPeer(**peer_kw))
+
+
+def _bundle(i, command=None, parents=()):
+    # awkward float amounts on purpose: summation order changes the
+    # bits, so identical fold totals really mean identical fold order
+    return ScheduleBundle(command=command or f"n{i}", payload={},
+                          n_profile_samples=1,
+                          planned=_rv(flops=0.1 * i + 0.3, hbm=0.7 * i),
+                          parents=tuple(parents))
+
+
+_DIAMOND = {0: (), 1: (0,), 2: (0,), 3: (0,), 4: (1, 2, 3)}
+
+
+def _fold_stream(fleet, bundles, **kw):
+    fold = ReportFold()
+    for idx, rep in fleet.stream(bundles, **kw):
+        if rep is None:
+            fold.skip(idx, ancestor=idx in fleet.last_ancestor_skips)
+        else:
+            fold.add(idx, rep)
+    return fold
+
+
+def test_edge_free_dag_folds_bit_identical_to_linear():
+    """The equivalence contract: same bundles, with and without an
+    (empty) edge set, fold to bit-identical totals — and the edged
+    diamond agrees too, because the fold is index-ordered."""
+    n = 8
+    with _EchoFleet(2) as fleet:
+        linear = _fold_stream(fleet, [_bundle(i) for i in range(n)])
+    with _EchoFleet(2) as fleet:
+        edge_free = _fold_stream(fleet,
+                                 [_bundle(i, parents=()) for i in range(n)])
+    assert edge_free.totals == linear.totals     # bitwise
+    assert [r.command for r in edge_free.reports] == \
+        [r.command for r in linear.reports]
+    with _EchoFleet(2) as fleet:
+        diamond = _fold_stream(
+            fleet, [_bundle(i, parents=_DIAMOND[i]) for i in range(5)])
+    with _EchoFleet(2) as fleet:
+        flat = _fold_stream(fleet, [_bundle(i) for i in range(5)])
+    assert diamond.totals == flat.totals         # bitwise
+
+
+def test_frontier_children_dispatch_after_parents_land():
+    with _EchoFleet(3) as fleet:
+        fold = _fold_stream(
+            fleet, [_bundle(i, parents=_DIAMOND[i]) for i in range(5)])
+        events = fleet.recorder.events()
+    assert fold.n_done == 5
+    first_disp = {}
+    done_t = {}
+    for e in events:
+        idx = e.get("idx")
+        if e.kind == "dispatch" and idx not in first_disp:
+            first_disp[idx] = e.t
+        elif e.kind == "done":
+            done_t[idx] = e.t
+    for child, parents in _DIAMOND.items():
+        for p in parents:
+            assert first_disp[child] >= done_t[p], \
+                f"bundle {child} dispatched before parent {p} finished"
+    # the frontier's own events are on the timeline
+    assert sum(e.kind == "dep_wait" for e in events) == 4
+    assert sum(e.kind == "dep_release" for e in events) == 4
+    # enqueue events carry the edges (the trace exporter's flow source)
+    enq = {e.get("idx"): e.get("parents") for e in events
+           if e.kind == "enqueue"}
+    assert enq[4] == [1, 2, 3] and enq[0] is None
+
+
+def test_requeued_parent_keeps_children_blocked():
+    """A parent that bounces ("retry": the peer's worker died under it)
+    must not release its children until the *successful* attempt."""
+    bundles = [_bundle(0, command="root"), _bundle(1, parents=(0,)),
+               _bundle(2, parents=(1,))]
+    with _EchoFleet(2, retry_once=("root",)) as fleet:
+        fold = _fold_stream(fleet, bundles)
+        events = fleet.recorder.events()
+    assert fold.n_done == 3 and fold.n_skipped == 0
+    assert any(e.kind == "requeue" and e.get("idx") == 0 for e in events)
+    root_done = next(e.t for e in events if e.kind == "done"
+                     and e.get("idx") == 0)
+    child_disp = min(e.t for e in events if e.kind == "dispatch"
+                     and e.get("idx") == 1)
+    assert child_disp >= root_done
+
+
+def test_skip_cascades_through_descendants():
+    """Kill the diamond's fork parent: every descendant is a typed
+    ``skipped_ancestor`` hole, the stream never deadlocks, and the fold
+    distinguishes cascade holes from direct poison."""
+    bundles = [_bundle(i, command="root" if i == 0 else f"n{i}",
+                       parents=_DIAMOND[i]) for i in range(5)]
+    with _EchoFleet(2, fail=("root",)) as fleet:
+        yielded = []
+        fold = ReportFold()
+        for idx, rep in fleet.stream(bundles, on_failure="skip",
+                                     max_attempts=1):
+            yielded.append((idx, rep))
+            if rep is None:
+                fold.skip(idx, ancestor=idx in fleet.last_ancestor_skips)
+            else:
+                fold.add(idx, rep)
+        rec = fleet.last_recovery
+        events = fleet.recorder.events()
+    assert yielded == [(i, None) for i in range(5)]
+    assert rec["skipped"] == [0, 1, 2, 3, 4]
+    assert rec["skipped_ancestor"] == [1, 2, 3, 4]   # root is direct poison
+    assert fold.n_skipped == 5 and fold.n_skipped_ancestor == 4
+    reasons = {e.get("idx"): e.get("reason") for e in events
+               if e.kind == "skip"}
+    assert reasons[0] is None and reasons[4] == "ancestor"
+
+
+def test_partial_cascade_spares_independent_branches():
+    bundles = [_bundle(i, command="branch2" if i == 2 else f"n{i}",
+                       parents=_DIAMOND[i]) for i in range(5)]
+    with _EchoFleet(2, fail=("branch2",)) as fleet:
+        fold = _fold_stream(fleet, bundles, on_failure="skip",
+                            max_attempts=1)
+        rec = fleet.last_recovery
+    # branches 1 and 3 (and the root) replay; only the sink cascades
+    assert fold.n_done == 3
+    assert rec["skipped"] == [2, 4]
+    assert rec["skipped_ancestor"] == [4]
+
+
+def test_doomed_on_arrival_skips_immediately():
+    """window=1: the child is admitted only after its parent was already
+    skipped — it must be announced as an ancestor hole on arrival, not
+    deadlock the admission loop."""
+    bundles = [_bundle(0, command="root"), _bundle(1, parents=(0,))]
+    with _EchoFleet(1, fail=("root",)) as fleet:
+        fold = _fold_stream(fleet, bundles, on_failure="skip",
+                            max_attempts=1, window=1)
+        rec = fleet.last_recovery
+    assert fold.n_skipped == 2 and fold.n_skipped_ancestor == 1
+    assert rec["skipped_ancestor"] == [1]
+
+
+def test_stream_rejects_forward_and_self_parents():
+    with _EchoFleet(1) as fleet:
+        with pytest.raises(ValueError, match="unsatisfiable"):
+            list(fleet.stream([_bundle(0, parents=(3,))]))
+
+
+# ---------------------------------------------------------------------------
+# critical-path accounting
+# ---------------------------------------------------------------------------
+
+def _t(enq, disp, done):
+    return BundleTiming(enqueued=enq, dispatched=disp, done=done,
+                        queue_s=0.0, replay_s=done - disp, attempts=1,
+                        ok=True)
+
+
+def test_critical_path_analytic_diamond():
+    # diamond: 0 -> {1 (2s), 2 (1s)} -> 3; work 0=1s, 3=1s
+    parents = {0: (), 1: (0,), 2: (0,), 3: (1, 2)}
+    tm = {0: _t(0, 0, 1), 1: _t(0, 1, 3), 2: _t(0, 1, 2), 3: _t(0, 3, 4)}
+    cp = critical_path(parents, tm)
+    assert cp["critical_path_s"] == pytest.approx(4.0)
+    assert cp["critical_nodes"] == [0, 1, 3]
+    assert cp["sum_work_s"] == pytest.approx(5.0)
+    assert cp["makespan_s"] == pytest.approx(4.0)
+    assert cp["parallelism"] == pytest.approx(5.0 / 4.0)
+    # slack: only the fast branch can grow (by 1s) before it matters
+    assert cp["slack_s"] == {0: 0.0, 1: 0.0, 2: pytest.approx(1.0), 3: 0.0}
+    assert cp["n_nodes"] == 4 and cp["n_edges"] == 4
+
+
+def test_critical_path_chain_and_edge_cases():
+    parents = {0: (), 1: (0,), 2: (1,)}
+    tm = {i: _t(0, i, i + 1) for i in range(3)}
+    cp = critical_path(parents, tm)
+    # a chain is all critical path: zero slack everywhere, parallelism 1
+    assert cp["critical_nodes"] == [0, 1, 2]
+    assert cp["critical_path_s"] == pytest.approx(cp["sum_work_s"])
+    assert all(s == 0.0 for s in cp["slack_s"].values())
+    assert critical_path({}, {}) == {}
+    # a missing node (raised run's tail) just drops its edges
+    partial = critical_path(parents, {0: _t(0, 0, 1), 1: _t(0, 1, 2)})
+    assert partial["n_nodes"] == 2 and partial["critical_nodes"] == [0, 1]
+
+
+def test_fleet_report_carries_dag_roundtrip():
+    cp = critical_path({0: (), 1: (0,)}, {0: _t(0, 0, 1), 1: _t(0, 1, 2)})
+    rep = FleetReport(reports=[], wall_s=1.0, serial_s=2.0, max_workers=2,
+                      dag=cp)
+    back = FleetReport.from_json(rep.to_json())
+    assert back.dag["critical_path_s"] == cp["critical_path_s"]
+    assert back.dag["slack_s"] == cp["slack_s"]          # int keys restored
+    assert rep.summary()["critical_path_s"] == cp["critical_path_s"]
+    assert FleetReport(reports=[], wall_s=1.0, serial_s=1.0,
+                       max_workers=1).summary().get("critical_path_s") is None
+
+
+# ---------------------------------------------------------------------------
+# config surface
+# ---------------------------------------------------------------------------
+
+def test_fleet_config_dag_validation():
+    with pytest.raises(ValueError, match="frontier"):
+        FleetConfig(executor="thread", dag=True)
+    cfg = FleetConfig.process(dag=True)
+    assert cfg.dag and pickle.loads(pickle.dumps(cfg)) == cfg
+    cfg.check_collect("reports")                         # fine
+    with pytest.raises(ValueError, match="totals"):
+        cfg.check_collect("totals")
+    # a non-dag config learns the source is a dag at call time
+    with pytest.raises(ValueError, match="totals"):
+        FleetConfig.process().check_collect("totals", dag=True)
+    FleetConfig.process().check_collect("totals", dag=False)
+
+
+def test_emulate_many_rejects_dag_on_thread_executor():
+    em = _em()
+    d = dag_diamond_workload(fanout=2, work_flops=FPI, work_hbm=BPI)
+    with pytest.raises(ValueError, match="frontier"):
+        em.emulate_many(d, config=FleetConfig.thread())
+
+
+# ---------------------------------------------------------------------------
+# trace export: flow arrows
+# ---------------------------------------------------------------------------
+
+def test_trace_emits_dependency_flow_arrows():
+    rec = FlightRecorder("coordinator")
+    rec.record("enqueue", idx=0)
+    rec.record("dispatch", idx=0, peer="worker:0", attempt=1)
+    rec.record("done", idx=0, peer="worker:0")
+    rec.record("enqueue", idx=1, parents=[0])
+    rec.record("dep_wait", idx=1, unmet=[0])
+    rec.record("dep_release", idx=1, parent=0)
+    rec.record("dispatch", idx=1, peer="worker:1", attempt=1)
+    rec.record("done", idx=1, peer="worker:1")
+    trace = to_chrome_trace(rec.events())
+    validate_trace(trace)
+    flows = [e for e in trace["traceEvents"] if e.get("cat") == "dag"
+             and e["ph"] in ("s", "f")]
+    assert len(flows) == 2
+    s, f = (flows[0], flows[1]) if flows[0]["ph"] == "s" \
+        else (flows[1], flows[0])
+    assert s["id"] == f["id"] and f["bp"] == "e"
+    assert s["args"] == {"parent": 0, "child": 1}
+    assert f["ts"] >= s["ts"]
+    # the arrow starts on the parent's worker track, not the child's
+    tids = {e["args"]["name"]: e["tid"] for e in trace["traceEvents"]
+            if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert s["tid"] == tids["worker:0"] and f["tid"] == tids["worker:1"]
+    # dep instants styled too
+    assert any(e.get("name") == "dep_wait" and e["ph"] == "i"
+               for e in trace["traceEvents"])
+
+
+def test_trace_links_collective_legs_across_workers():
+    rec = FlightRecorder("coordinator")
+    rec.record("collective_leg", scope="worker:0", idx=0, n=2,
+               group="allreduce:7")
+    rec.record("collective_leg", scope="worker:1", idx=1, n=2,
+               group="allreduce:7")
+    rec.record("collective_leg", scope="worker:0", idx=2, n=1)  # no group
+    trace = to_chrome_trace(rec.events())
+    validate_trace(trace)
+    links = [e for e in trace["traceEvents"]
+             if e.get("name") == "collective_link"]
+    assert len(links) == 2                       # one s/f pair
+    assert {e["ph"] for e in links} == {"s", "f"}
+    assert links[0]["id"] == links[1]["id"]
+    # same-group legs on ONE worker don't get arrows
+    rec2 = FlightRecorder("coordinator")
+    rec2.record("collective_leg", scope="worker:0", idx=0, group="g")
+    rec2.record("collective_leg", scope="worker:0", idx=1, group="g")
+    t2 = to_chrome_trace(rec2.events())
+    assert not any(e.get("name") == "collective_link"
+                   for e in t2["traceEvents"])
+
+
+# ---------------------------------------------------------------------------
+# process fleet: real end-to-end DAG replay (slow, subprocess)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.subproc
+def test_dag_diamond_on_process_fleet_exact_totals_and_critical_path():
+    em = _em()
+    d = dag_diamond_workload(fanout=3, work_flops=FPI, work_hbm=BPI,
+                             samples_per=2, straggler_index=1,
+                             straggler_factor=2.0)
+    out = em.emulate_many(d, config=FleetConfig.process(max_workers=2,
+                                                        timeout=300.0))
+    assert out.totals == d.totals                # bit-identical fold
+    assert out.n_replayed == len(d)
+    cp = out.dag
+    assert cp["n_nodes"] == 5 and cp["n_edges"] == 6
+    assert cp["critical_path_s"] > 0.0
+    # source -> one branch -> sink: the path's shape is deterministic even
+    # though which branch wall-clock crowned is not (the analytic fixture
+    # above pins the straggler-routing math without timing noise)
+    assert cp["critical_nodes"][0] == 0 and cp["critical_nodes"][-1] == 4
+    assert len(cp["critical_nodes"]) == 3
+    assert cp["critical_nodes"][1] in (1, 2, 3)
+    assert cp["makespan_s"] >= cp["critical_path_s"] * 0.5
+    # dependency edges landed in the merged timeline
+    events = [Event.from_dict(x) for x in out.obs["events"]]
+    assert any(e.kind == "dep_release" for e in events)
+    trace = to_chrome_trace(events)
+    validate_trace(trace)
+    assert any(e.get("cat") == "dag" and e.get("ph") == "s"
+               for e in trace["traceEvents"])
+
+
+def _run_dag_chaos():
+    em = _em()
+    d = dag_diamond_workload(fanout=3, work_flops=FPI, work_hbm=BPI,
+                             samples_per=2, straggler_index=1,
+                             straggler_factor=2.0)
+    cfg = FleetConfig.process(
+        max_workers=2, window=1,     # window=1: deterministic dispatch
+        chaos=ChaosPolicy(seed=11, kill_every=3, max_faults=1),
+        liveness_timeout=5.0, max_respawns=8, dag=True, timeout=300.0)
+    out = em.emulate_many(d, config=cfg)
+    return out, d
+
+
+@pytest.mark.slow
+@pytest.mark.subproc
+def test_dag_chaos_kill_fork_parent_is_deterministic():
+    """kill_every=3 (max_faults=1) kills the serving worker under a
+    mid-diamond branch: the bundle requeues onto the survivor, and the
+    sink must only dispatch after the *recovered* branch's result.  The
+    seeded schedule must reproduce the same event sequence run to run."""
+    out, d = _run_dag_chaos()
+    assert out.recovery["worker_deaths"] >= 1
+    assert out.recovery["requeued"] >= 1
+    assert out.recovery["skipped"] == []         # recovered, not degraded
+    assert out.n_replayed == len(d)
+    assert out.totals == d.totals                # fold unchanged by chaos
+    events = [Event.from_dict(x) for x in out.obs["events"]]
+    done_t = {e.get("idx"): e.t for e in events if e.kind == "done"}
+    for child, parents in d.parents_map.items():
+        for p in parents:
+            first = min(e.t for e in events if e.kind == "dispatch"
+                        and e.get("idx") == child)
+            assert first >= done_t[p], \
+                f"node {child} dispatched before recovered parent {p}"
+    out2, _ = _run_dag_chaos()
+    events2 = [Event.from_dict(x) for x in out2.obs["events"]]
+    assert event_sequence(events) == event_sequence(events2)

@@ -18,7 +18,7 @@ from repro.scenarios import (generate, get_scenario, list_scenarios,
 from repro.scenarios.__main__ import main as cli_main
 
 EXPECTED = {"training_scan", "serving_traffic", "fanout_straggler",
-            "retry_storm", "mixed_fleet"}
+            "retry_storm", "mixed_fleet", "dag_diamond", "deep_chain"}
 
 # Small sizes so generate+emulate stays fast in CI.
 FAST = {
@@ -29,6 +29,8 @@ FAST = {
     "fanout_straggler": dict(n_workers=4, work_flops=1e7, work_hbm=2e6),
     "retry_storm": dict(n_tasks=4, work_flops=1e7, work_hbm=2e6),
     "mixed_fleet": dict(total_samples=6),
+    "dag_diamond": dict(fanout=3, work_flops=1e7, work_hbm=2e6),
+    "deep_chain": dict(depth=3, work_flops=1e7, work_hbm=2e6),
 }
 
 
